@@ -1,0 +1,60 @@
+"""Tables II/IV analog: inspection (staging + Stage-2 compile) time.
+
+Paper: SABLE's inspection = codegen + gcc compile; compile-once/run-many
+amortizes it.  Here Stage-2 is XLA; we report Stage-0 (block iteration +
+pattern matching) and Stage-2 (AOT compile) separately, plus the cache-hit
+cost for a second matrix with the same pattern (~0: the paper's reuse
+contract).  ``derived`` = compile fraction of inspection.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import vbr as vbrlib
+from repro.core.staging import StagedKernel, StagingOptions, clear_cache, stage_spmv
+
+from .common import csv_row
+
+
+def run(scale: float = 0.2) -> None:
+    n = int(10_000 * scale)
+    for rs, cs, nb, zp, kind in [
+        (50, 50, 25, 20, "u"),
+        (50, 50, 500, 20, "u"),
+        (50, 50, 500, 50, "u"),
+        (50, 50, 500, 75, "u"),
+        (100, 100, 500, 75, "u"),
+        (50, 50, 500, 20, "nu"),
+    ]:
+        v = vbrlib.synthesize(n, n, rs, cs, nb, zp / 100, kind == "u",
+                              seed=nb + zp)
+        clear_cache()
+        k = StagedKernel("spmv", v, StagingOptions(backend="grouped"))
+        k.compile(
+            jax.ShapeDtypeStruct(v.val.shape, jnp.float32),
+            jax.ShapeDtypeStruct((v.shape[1],), jnp.float32),
+        )
+        insp_ms = k.inspection_time * 1e3
+        frac = k.compile_time / max(k.inspection_time, 1e-12)
+        csv_row(f"inspection/<{rs},{cs},{nb},{zp},{kind}>", insp_ms * 1e3,
+                f"compile_frac={frac:.2f}")
+        # compile-once / run-many: same pattern, new values
+        v2 = vbrlib.VBR(**{**v.__dict__})
+        v2.val = v.val * 2.0
+        t0 = time.perf_counter()
+        k2 = stage_spmv(v2, StagingOptions(backend="grouped"))
+        hit_ms = (time.perf_counter() - t0) * 1e3
+        csv_row(f"inspection/<{rs},{cs},{nb},{zp},{kind}>/cache-hit",
+                hit_ms * 1e3, f"reuse={'hit' if k2 is k else 'miss'}")
+
+
+def main(quick: bool = False):
+    run(scale=0.1 if quick else 0.2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Figs 6/9 analog: parallel scaling of the blocked evaluation.
+
+The paper measures thread scaling (1..16 threads).  This container has one
+physical core, so wall-clock thread scaling is unmeasurable; what IS
+measurable is the quantity that bounds it: the load balance of the paper's
+Section IV-D block-row partitioning.  We report, for 1..16 workers,
+``parallel efficiency upper bound = total_work / (workers * max_load)`` —
+with perfect balance this is 1.0 and wall-clock scaling follows it on real
+hardware.  ``us_per_call`` is the per-worker max load in FLOP-equivalents
+scaled to the single-thread staged time, i.e. the projected step time.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import vbr as vbrlib
+from repro.core.staging import StagingOptions, partition_block_rows, stage_spmv
+
+from .common import csv_row, timeit
+
+
+def run(n: int = 2000, iters: int = 8) -> None:
+    for rs, cs, nb in [(20, 20, 50), (50, 50, 500), (100, 100, 2000)]:
+        v = vbrlib.synthesize(n, n, rs, cs, nb, 0.2, False, seed=nb)
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(n), jnp.float32)
+        k = stage_spmv(v, StagingOptions(backend="grouped"))
+        t1 = timeit(k, jnp.asarray(v.val), x, iters=iters)
+        sizes = np.zeros(v.num_block_rows, dtype=np.int64)
+        for t in v.blocks():
+            sizes[t.block_row] += t.size
+        total = float(sizes.sum())
+        for workers in (1, 2, 4, 8, 16):
+            bins = partition_block_rows(v, workers)
+            loads = [sum(float(sizes[a]) for a in b) for b in bins]
+            max_load = max(loads) if loads else total
+            eff = total / (workers * max_load) if max_load else 1.0
+            projected = t1 * max_load / total
+            csv_row(
+                f"scaling/Matrix_{rs}_{cs}_{nb}/w{workers}",
+                projected * 1e6,
+                f"par_eff={eff:.3f}",
+            )
+
+
+def main(quick: bool = False):
+    run(n=1000 if quick else 2000, iters=4 if quick else 8)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Figs 7/10 analog: speedup vs intra-block sparsity.
+
+The paper's claim: SABLE wins up to ~75% zeros in the blocks, because
+computing over zeros beats gathering around them; beyond that the wasted
+work dominates.  We sweep block sparsity and report staged-vs-CSR speedup
+(the crossover is the 'how many zeros can regularity tolerate' curve).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import vbr as vbrlib
+from repro.core.staging import StagingOptions, stage_spmv
+
+from .common import csr_spmv, csv_row, timeit
+
+
+def run(n: int = 2000, iters: int = 10) -> None:
+    for sparsity in (0.0, 0.25, 0.5, 0.75, 0.9, 0.95):
+        v = vbrlib.synthesize(n, n, 50, 50, 100, sparsity, True, seed=7)
+        x = jnp.asarray(
+            np.random.default_rng(1).standard_normal(n), jnp.float32
+        )
+        val = jnp.asarray(v.val)
+        k = stage_spmv(v, StagingOptions(backend="grouped"))
+        t_sable = timeit(k, val, x, iters=iters)
+        kc, cvals = csr_spmv(v)
+        t_csr = timeit(kc, cvals, x, iters=iters)
+        csv_row(
+            f"sparsity_sweep/z{int(sparsity*100)}",
+            t_sable * 1e6,
+            f"{t_csr/t_sable:.2f}x_vs_csr",
+        )
+
+
+def main(quick: bool = False):
+    run(n=1000 if quick else 2000, iters=5 if quick else 10)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Table III analog: SpMM (dense width 512 in the paper; scaled here).
+
+SABLE staged backends vs gather-CSR and dense matmul baselines.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.staging import StagingOptions, stage_spmm
+
+from .common import csr_spmm, csv_row, dense_spmm, paper_matrices, timeit
+
+
+def run(scale: float = 0.1, n_cols: int = 128, zeros_pcts=(0, 20, 50),
+        iters: int = 5) -> None:
+    for zp in zeros_pcts:
+        for name, v in paper_matrices(scale, zp):
+            X = jnp.asarray(
+                np.random.default_rng(0).standard_normal((v.shape[1], n_cols)),
+                jnp.float32,
+            )
+            val = jnp.asarray(v.val)
+            kc, cvals = csr_spmm(v)
+            t_csr = timeit(kc, cvals, X, iters=iters)
+            kd, dmat = dense_spmm(v)
+            t_dense = timeit(kd, dmat, X, iters=iters)
+            kg = stage_spmm(v, n_cols, StagingOptions(backend="grouped"))
+            t_grouped = timeit(kg, val, X, iters=iters)
+            csv_row(f"spmm/{name}/z{zp}/sable-grouped", t_grouped * 1e6,
+                    f"{t_csr/t_grouped:.2f}x_vs_csr")
+            csv_row(f"spmm/{name}/z{zp}/csr", t_csr * 1e6, "1.00x_vs_csr")
+            csv_row(f"spmm/{name}/z{zp}/dense", t_dense * 1e6,
+                    f"{t_csr/t_dense:.2f}x_vs_csr")
+
+
+def main(quick: bool = False):
+    run(scale=0.05 if quick else 0.1, n_cols=64 if quick else 128,
+        zeros_pcts=(20,) if quick else (0, 20, 50), iters=3 if quick else 5)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Shared benchmark utilities: timing, baselines, CSV output."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import vbr as vbrlib
+
+
+def timeit(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall time (seconds) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+# ----------------------------------------------------------------------- #
+# Baseline strategy classes (see DESIGN.md §2: PSC/SpReg's CPU codebases
+# don't run here; we implement their strategy class in JAX)
+# ----------------------------------------------------------------------- #
+def csr_spmv(v: vbrlib.VBR):
+    """Gather-based unstructured CSR (the 'avoid every zero' class)."""
+    d = v.to_dense()
+    rows, cols = np.nonzero(d)
+    vals = jnp.asarray(d[rows, cols])
+    rows_j, cols_j = jnp.asarray(rows), jnp.asarray(cols)
+    m = d.shape[0]
+
+    @jax.jit
+    def f(vals, x):
+        return jnp.zeros(m, x.dtype).at[rows_j].add(vals * x[cols_j])
+
+    return f, vals
+
+
+def csr_spmm(v: vbrlib.VBR):
+    d = v.to_dense()
+    rows, cols = np.nonzero(d)
+    vals = jnp.asarray(d[rows, cols])
+    rows_j, cols_j = jnp.asarray(rows), jnp.asarray(cols)
+    m = d.shape[0]
+
+    @jax.jit
+    def f(vals, x):
+        return jnp.zeros((m, x.shape[1]), x.dtype).at[rows_j].add(
+            vals[:, None] * x[cols_j]
+        )
+
+    return f, vals
+
+
+def dense_spmv(v: vbrlib.VBR):
+    d = jnp.asarray(v.to_dense())
+
+    @jax.jit
+    def f(d, x):
+        return d @ x
+
+    return f, d
+
+
+def dense_spmm(v: vbrlib.VBR):
+    return dense_spmv(v)
+
+
+# paper-style matrix set, scaled by `scale` (1.0 = the paper's 10k x 10k)
+def paper_matrices(scale: float = 0.2, zeros_pct: int = 20):
+    n = int(10_000 * scale)
+    cells = [
+        (50, 50, 25, "u"),
+        (50, 50, 500, "u"),
+        (50, 100, 50, "u"),
+        (100, 50, 250, "u"),
+        (100, 100, 500, "u"),
+        (50, 50, 25, "nu"),
+        (50, 50, 500, "nu"),
+        (100, 100, 500, "nu"),
+    ]
+    out = []
+    for rs, cs, nb, kind in cells:
+        v = vbrlib.synthesize(
+            n, n, rs, cs, nb, zeros_pct / 100.0, kind == "u",
+            seed=hash((rs, cs, nb, kind)) % 2**31,
+        )
+        out.append((f"<{rs},{cs},{nb},{kind}>", v))
+    return out

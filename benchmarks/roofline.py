@@ -1,0 +1,108 @@
+"""Roofline report: aggregate dry-run JSONs into the §Roofline table.
+
+Per (arch x shape x mesh): the three terms (seconds), dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPS (useful-compute ratio), and the roofline fraction
+  RF = t_compute / max(terms)
+i.e. the fraction of the compute roofline attainable with perfect overlap —
+RF = 1.0 means compute-bound at peak; the hillclimb drives max(terms) down
+toward t_compute.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+      [--md experiments/roofline.md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_reports(d: str) -> list:
+    out = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s*1e3:.1f}"
+
+
+def row_of(r: dict) -> dict:
+    rf = r["roofline"]
+    bound = max(rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"])
+    return {
+        "arch": r["arch"],
+        "shape": r["shape"],
+        "mesh": r["mesh"],
+        "compute_ms": rf["t_compute_s"] * 1e3,
+        "memory_ms": rf["t_memory_s"] * 1e3,
+        "collective_ms": rf["t_collective_s"] * 1e3,
+        "dominant": rf["dominant"],
+        "bound_ms": bound * 1e3,
+        "roofline_fraction": rf["t_compute_s"] / bound if bound else 0.0,
+        "useful_ratio": r.get("useful_flops_ratio", 0.0),
+        "args_gb": r.get("memory", {}).get("argument_size_in_bytes", 0) / 1e9,
+        "temp_gb": r.get("memory", {}).get("temp_size_in_bytes", 0) / 1e9,
+    }
+
+
+HEADER = (
+    "| arch | shape | mesh | compute ms | memory ms | collective ms | "
+    "dominant | RF | model/HLO flops | args GB/dev | temp GB/dev |"
+)
+SEP = "|" + "---|" * 11
+
+
+def to_markdown(reports: list) -> str:
+    lines = [HEADER, SEP]
+    ok = [r for r in reports if r.get("status") == "ok"]
+    skipped = [r for r in reports if r.get("status") == "skipped"]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        w = row_of(r)
+        lines.append(
+            f"| {w['arch']} | {w['shape']} | {w['mesh']} "
+            f"| {w['compute_ms']:.2f} | {w['memory_ms']:.2f} "
+            f"| {w['collective_ms']:.2f} | {w['dominant']} "
+            f"| {w['roofline_fraction']:.3f} | {w['useful_ratio']:.2f} "
+            f"| {w['args_gb']:.2f} | {w['temp_gb']:.2f} |"
+        )
+    if skipped:
+        lines.append("")
+        lines.append("Skipped cells (documented):")
+        for r in sorted(skipped, key=lambda r: (r["arch"], r["shape"])):
+            lines.append(f"- {r['arch']} x {r['shape']} x {r['mesh']}: "
+                         f"{r['reason']}")
+    return "\n".join(lines)
+
+
+def main(quick: bool = False, directory: str = "experiments/dryrun",
+         md_out: str = None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=directory)
+    ap.add_argument("--md", default=md_out)
+    args, _ = ap.parse_known_args()
+    reports = load_reports(args.dir)
+    if not reports:
+        print(f"roofline/no-reports,0.0,dir={args.dir}")
+        return
+    ok = [r for r in reports if r.get("status") == "ok"]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        w = row_of(r)
+        print(
+            f"roofline/{w['arch']}/{w['shape']}/{w['mesh']},"
+            f"{w['bound_ms']*1e3:.1f},"
+            f"RF={w['roofline_fraction']:.3f}:dom={w['dominant']}"
+        )
+    md = to_markdown(reports)
+    if args.md:
+        os.makedirs(os.path.dirname(args.md) or ".", exist_ok=True)
+        with open(args.md, "w") as f:
+            f.write(md + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark aggregator: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` uses larger (closer to
+paper-scale) matrices; the default 'quick' sizes keep the whole suite a few
+minutes on one CPU core.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only spmv,spmm,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import (
+    bench_codegen_variants,
+    bench_inspection,
+    bench_scaling,
+    bench_sparsity_sweep,
+    bench_spmm,
+    bench_spmv,
+    roofline,
+)
+
+SUITES = {
+    "spmv": bench_spmv.main,  # Table I
+    "spmm": bench_spmm.main,  # Table III
+    "sparsity": bench_sparsity_sweep.main,  # Figs 7/10
+    "codegen": bench_codegen_variants.main,  # Figs 8/11
+    "inspection": bench_inspection.main,  # Tables II/IV
+    "scaling": bench_scaling.main,  # Figs 6/9
+    "roofline": roofline.main,  # §Roofline (from dry-run artifacts)
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args, _ = ap.parse_known_args()
+    only = set(args.only.split(",")) if args.only else set(SUITES)
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in SUITES.items():
+        if name not in only:
+            continue
+        try:
+            fn(quick=not args.full)
+        except Exception as e:  # keep the suite going; report at the end
+            traceback.print_exc()
+            failed.append((name, e))
+    if failed:
+        for name, e in failed:
+            print(f"FAILED suite {name}: {e}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: SABLE (staged blocked evaluation over structured sparse matrices)
+as a production JAX training/serving framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,1 @@
+from .pipeline import FileDataset, SyntheticDataset, Prefetcher, make_dataset

@@ -1,0 +1,8 @@
+from .sharding import (
+    ParallelConfig,
+    batch_specs,
+    cache_specs,
+    make_shardings,
+    param_specs,
+    opt_state_specs,
+)

@@ -1,0 +1,260 @@
+"""Sharding rules: DP / FSDP(ZeRO) / TP / EP / SP over the production mesh.
+
+Axes:
+  dp axes      ("pod", "data")  — batch (data parallel)
+  fsdp axes    ("data",) default, optionally +("pod",) — parameter and
+               optimizer-state sharding (ZeRO-3); all-gathered per scan step
+  tensor axis  "model"          — Megatron-style TP, MoE expert parallelism,
+               and sequence/context-parallel KV caches when head counts
+               don't divide the axis
+
+Rules are (regex over leaf path) -> PartitionSpec; leaves under a scanned
+group get the stack dimension prepended automatically.  This is the single
+source of truth consumed by train/serve/dryrun in_shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "ParallelConfig",
+    "param_specs",
+    "opt_state_specs",
+    "batch_specs",
+    "cache_specs",
+    "make_shardings",
+    "path_of",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelConfig:
+    fsdp: bool = True
+    fsdp_over_pod: bool = False  # ZeRO across pods (DCN) too
+    tensor_axis: str = "model"
+    dp_axes: tuple = ("pod", "data")
+    compress_grads: bool = True  # bf16 gradient collectives
+    seq_shard_cache: bool = True  # context-parallel KV when heads don't divide
+
+
+def _present(mesh: Mesh, axes) -> tuple:
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def dp_axes(mesh: Mesh, pc: ParallelConfig) -> tuple:
+    return _present(mesh, pc.dp_axes)
+
+
+def fsdp_axes(mesh: Mesh, pc: ParallelConfig) -> Optional[tuple]:
+    if not pc.fsdp:
+        return None
+    axes = ("pod", "data") if pc.fsdp_over_pod else ("data",)
+    out = _present(mesh, axes)
+    return out or None
+
+
+def path_of(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _rules(F, M, FM):
+    """F = fsdp axes (or None), M = tensor axis, FM = (F..., M) joint.
+
+    Column-parallel weights shard their OUTPUT dim jointly over (fsdp,
+    tensor): the contraction (input) dim stays local, so using the weight
+    costs one small all-gather over fsdp (ZeRO-3 fetch) instead of an
+    all-reduce of the much larger activation partial sums.  §Perf iteration
+    2 (EXPERIMENTS.md) measured ~6x collective-term reduction vs sharding
+    the contraction dim.  Order matters.
+    """
+    return [
+        # MoE — experts over the tensor axis (EP); per-expert dims: the
+        # contraction dim of each expert einsum must stay local, FSDP
+        # shards the other one.
+        (r"moe/router$", P(None, None)),
+        (r"moe/w[13]$", P(M, None, F)),
+        # w2's output (d) dim stays UNSHARDED: FSDP on it conflicts with
+        # the group-local combine gather layout (costs an extra (T,k,d)
+        # all-reduce over model — §Perf deepseek iteration 4)
+        (r"moe/w2$", P(M, F, None)),
+        (r"moe/sw[13]$", P(None, FM)),
+        (r"moe/sw2$", P(M, F)),
+        # MLA
+        (r"mixer/wdq$", P(None, F)),
+        (r"mixer/wuq$", P(None, FM)),
+        (r"mixer/wdkv$", P(None, F)),
+        (r"mixer/wukv$", P(None, FM)),
+        (r"mixer/(qln|kvln)$", P()),
+        # attention (gqa + cross) — column-parallel qkv, row-parallel out
+        (r"(mixer|cross)/w[qkv]$", P(None, FM)),
+        (r"(mixer|cross)/wo$", P(M, F)),
+        (r"(mixer|cross)/(qn|kn)$", P()),
+        # mamba
+        (r"mixer/in_(z|x|b|c|dt)$", P(None, FM)),
+        (r"mixer/conv_w$", P(None, M)),
+        (r"mixer/(conv_b|A_log|D|dt_bias|norm)$", P(M)),
+        (r"mixer/out_proj$", P(M, F)),
+        # FFN — SABLE tiles shard blocks over the tensor axis
+        (r"ffn/w[123]$", "ffn"),  # resolved by ndim below
+        # embeddings
+        (r"(^|/)embed$", P(M, F)),
+        (r"lm_head$", P(None, FM)),
+        (r"frontend_proj$", P(None, F)),
+    ]
+
+
+def _spec_for(path: str, ndim: int, stacked: bool, F, M, FM) -> P:
+    base_ndim = ndim - 1 if stacked else ndim
+    spec = None
+    for pat, s in _rules(F, M, FM):
+        if re.search(pat, path):
+            if s == "ffn":
+                if base_ndim == 3:  # SABLE tiles (nt, tm, tk)
+                    spec = P(M, None, None)
+                elif re.search(r"ffn/w2$", path):
+                    spec = P(M, F)
+                else:
+                    spec = P(None, FM)
+            else:
+                spec = s
+            break
+    if spec is None:
+        spec = P()  # norms, scalars: replicated
+    parts = list(spec) + [None] * (base_ndim - len(spec))
+    if stacked:
+        parts = [None] + parts
+    return P(*parts[:ndim]) if ndim else P()
+
+
+def param_specs(cfg, params) -> object:
+    """PartitionSpec pytree for a params pytree (arrays or SDS)."""
+    del cfg
+
+    def one(kp, leaf):
+        path = path_of(kp)
+        stacked = path.startswith(("groups/", "enc_groups/"))
+        return _spec_for(path, leaf.ndim, stacked, "__F__", "__M__", "__FM__")
+
+    marked = jax.tree_util.tree_map_with_path(one, params)
+    return marked
+
+
+def opt_state_specs(cfg, params, opt_state):
+    """Moments share the param specs; the count scalar is replicated."""
+    pspecs = param_specs(cfg, params)
+    return {
+        "mu": pspecs,
+        "nu": pspecs,
+        "count": P(),
+    }
+
+
+def batch_specs(cfg, batch) -> dict:
+    def one(kp, leaf):
+        return P("__DP__", *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+def cache_specs(cfg, cache, pc: ParallelConfig = ParallelConfig(), model_size: int = 16):
+    """KV/SSM cache specs.  Heads shard over the tensor axis when they
+    divide it; otherwise the sequence dim is context-parallel sharded
+    (XLA SPMD turns the attention contraction over the sharded sequence
+    into partial-softmax + reduce — flash-decoding style)."""
+
+    def one(kp, leaf):
+        path = path_of(kp)
+        nd = leaf.ndim
+        if re.search(r"(attn|cross)/(k|v)$", path):
+            # (rep, B, S, K, hd)
+            if cfg.n_kv_heads % model_size == 0:
+                return P(None, "__DP__", None, "__M__", None)
+            if pc.seq_shard_cache:
+                return P(None, "__DP__", "__M__", None, None)
+            return P(None, "__DP__", None, None, None)
+        if re.search(r"attn/(ckv|kr)$", path):
+            # (rep, B, S, c) — MLA latent: sequence-sharded (context parallel)
+            return P(None, "__DP__", "__M__", None)
+        if re.search(r"ssm_cache/conv$", path):
+            return P(None, "__DP__", None, "__M__")
+        if re.search(r"ssm_cache/ssm$", path):
+            return P(None, "__DP__", "__M__", None, None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def _axes_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    axes = entry if isinstance(entry, (tuple, list)) else (entry,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def make_shardings(mesh: Mesh, pc: ParallelConfig, spec_tree, tree=None):
+    """Resolve placeholder axes and wrap in NamedSharding.
+
+    If ``tree`` (arrays or ShapeDtypeStructs matching spec_tree) is given,
+    specs are sanitized: sharding is dropped on any dim whose size is not
+    divisible by the axis product (pjit's explicit in_shardings require
+    exact divisibility — e.g. vocab 256206 over 16, or batch 1 over dp).
+    """
+    F = fsdp_axes(mesh, pc)
+    M = pc.tensor_axis if pc.tensor_axis in mesh.axis_names else None
+    DP = dp_axes(mesh, pc)
+
+    fm = tuple(F) if F else ()
+    fm = fm + ((M,) if M else ())
+
+    def resolve(s):
+        parts = []
+        for p in s:
+            if p == "__F__":
+                parts.append(F)
+            elif p == "__M__":
+                parts.append(M)
+            elif p == "__FM__":
+                parts.append(fm if fm else None)
+            elif p == "__DP__":
+                parts.append(DP if DP else None)
+            else:
+                parts.append(p)
+        return parts
+
+    if tree is None:
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, P(*resolve(s))),
+            spec_tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    def fix(s, leaf):
+        if not isinstance(s, P):
+            return s
+        parts = resolve(s)
+        shape = getattr(leaf, "shape", ())
+        parts = parts[: len(shape)]
+        for i, entry in enumerate(parts):
+            if entry is not None and shape[i] % _axes_size(mesh, entry) != 0:
+                parts[i] = None
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(
+        fix, spec_tree, tree, is_leaf=lambda x: isinstance(x, P)
+    )

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the SABLE compute hot-spots."""
+from . import ops, ref
+from .ops import bsr_spmm, bsr_spmv

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: block-sparse SpMV over uniformized VBR tiles.
+
+SpMV is VPU-bound (no MXU): each grid step multiplies one (tm, tk) tile by
+a tk-slice of x and accumulates a tm-slice of y.  x and y are viewed as
+(k_pad/tk, tk) and (m_pad/tm, tm) so all Pallas blocks are 2-D and
+lane-aligned (tm, tk multiples of 128 on real hardware; anything in
+interpret mode).  Same sorted-rows accumulate-in-VMEM schedule as SpMM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except Exception:  # pragma: no cover
+    pltpu = None
+
+
+def _kernel(row_ids, col_ids, tiles_ref, x_ref, y_ref, *, acc_dtype):
+    b = pl.program_id(0)
+    row = row_ids[b]
+    prev_row = row_ids[jnp.maximum(b - 1, 0)]
+    is_first = jnp.logical_or(b == 0, prev_row != row)
+
+    @pl.when(is_first)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    tile = tiles_ref[0].astype(acc_dtype)  # (tm, tk)
+    xv = x_ref[0].astype(acc_dtype)  # (tk,)
+    acc = jnp.sum(tile * xv[None, :], axis=1)  # VPU reduce over lanes
+    y_ref[0, :] += acc.astype(y_ref.dtype)
+
+
+def bsr_spmv_pallas(
+    tiles: jax.Array,  # (nb, tm, tk)
+    row_ids: jax.Array,  # (nb,) int32, sorted
+    col_ids: jax.Array,  # (nb,) int32
+    x: jax.Array,  # (k_pad,)
+    *,
+    m_pad: int,
+    interpret: bool = False,
+    acc_dtype=jnp.float32,
+) -> jax.Array:
+    nb, tm, tk = tiles.shape
+    (k_pad,) = x.shape
+    assert k_pad % tk == 0 and m_pad % tm == 0
+    x2 = x.reshape(k_pad // tk, tk)
+
+    kernel = functools.partial(_kernel, acc_dtype=acc_dtype)
+    in_specs = [
+        pl.BlockSpec((1, tm, tk), lambda b, rows, cols: (b, 0, 0)),
+        pl.BlockSpec((1, tk), lambda b, rows, cols: (cols[b], 0)),
+    ]
+    out_spec = pl.BlockSpec((1, tm), lambda b, rows, cols: (rows[b], 0))
+    out_shape = jax.ShapeDtypeStruct((m_pad // tm, tm), x.dtype)
+
+    if pltpu is not None:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(nb,),
+            in_specs=in_specs,
+            out_specs=out_spec,
+        )
+        compiler_params = pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",),
+        )
+        y2 = pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+            compiler_params=compiler_params,
+            interpret=interpret,
+        )(row_ids, col_ids, tiles, x2)
+        return y2.reshape(m_pad)
+
+    raise RuntimeError("pallas TPU backend unavailable")  # pragma: no cover

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas block-sparse kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def bsr_spmm_ref(tiles, row_ids, col_ids, x, m_pad):
+    """y[row*tm:(row+1)*tm, :] += tile @ x[col*tk:(col+1)*tk, :]."""
+    tiles = np.asarray(tiles)
+    nb, tm, tk = tiles.shape
+    n = x.shape[1]
+    y = np.zeros((m_pad, n), dtype=np.result_type(tiles.dtype, np.asarray(x).dtype))
+    x = np.asarray(x)
+    for b in range(nb):
+        r, c = int(row_ids[b]), int(col_ids[b])
+        y[r * tm : (r + 1) * tm, :] += tiles[b] @ x[c * tk : (c + 1) * tk, :]
+    return jnp.asarray(y)
+
+
+def bsr_spmv_ref(tiles, row_ids, col_ids, x, m_pad):
+    """y[row*tm:(row+1)*tm] += tile @ x[col*tk:(col+1)*tk]."""
+    tiles = np.asarray(tiles)
+    nb, tm, tk = tiles.shape
+    y = np.zeros((m_pad,), dtype=np.result_type(tiles.dtype, np.asarray(x).dtype))
+    x = np.asarray(x)
+    for b in range(nb):
+        r, c = int(row_ids[b]), int(col_ids[b])
+        y[r * tm : (r + 1) * tm] += tiles[b] @ x[c * tk : (c + 1) * tk]
+    return jnp.asarray(y)
+
+
+def vbr_spmv_ref(vbr, x):
+    """Densify-and-multiply oracle for end-to-end staged SpMV."""
+    return jnp.asarray(vbr.to_dense()) @ jnp.asarray(x)
+
+
+def vbr_spmm_ref(vbr, x):
+    return jnp.asarray(vbr.to_dense()) @ jnp.asarray(x)

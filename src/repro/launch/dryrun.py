@@ -1,0 +1,305 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Run:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both \
+      --out experiments/dryrun
+
+The first two lines MUST set XLA_FLAGS before any jax import: the dry-run
+(and only the dry-run) builds the 512-device production mesh on host
+placeholder devices.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import ARCH_IDS, SHAPES, get_config, shape_applicable  # noqa: E402
+from ..configs.shapes import src_len  # noqa: E402
+from ..distributed.sharding import (  # noqa: E402
+    ParallelConfig,
+    batch_specs,
+    cache_specs,
+    make_shardings,
+    param_specs,
+)
+from ..models.config import ModelConfig, param_count  # noqa: E402
+from ..models.transformer import decode_step, encode, forward_train, prefill  # noqa: E402
+from ..optim.adamw import AdamWConfig  # noqa: E402
+from ..train.step import make_train_step  # noqa: E402
+from . import hlo_stats  # noqa: E402
+from .mesh import HW, make_production_mesh  # noqa: E402
+from .specs import abstract_cache, abstract_opt, abstract_params, input_specs  # noqa: E402
+
+OPT = AdamWConfig(state_dtype="bfloat16")
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def build_cell(cfg: ModelConfig, shape, mesh, pc: ParallelConfig):
+    """Returns (jitted_fn, example_args, in_shardings_tree) for the cell."""
+    model_size = mesh.shape[pc.tensor_axis]
+    if shape.kind != "train" and pc.fsdp:
+        # Serving: FSDP would re-gather weight shards every decode step
+        # (§Perf iteration 3: mamba2 decode was collective-bound on weight
+        # all-gathers).  Replicate over dp when the TP-sharded params fit
+        # comfortably (< 8 GB/device), else keep ZeRO sharding.
+        per_dev = 4 * param_count(cfg) / model_size
+        if per_dev < 8e9:
+            pc = dataclasses.replace(pc, fsdp=False)
+    params = abstract_params(cfg)
+    pshard = make_shardings(mesh, pc, param_specs(cfg, params), params)
+    ins = input_specs(cfg, shape)
+    rep = _replicated(mesh)
+
+    if shape.kind == "train":
+        opt = abstract_opt(cfg, OPT)
+        oshard = {
+            "mu": pshard,
+            "nu": pshard,
+            "count": rep,
+        }
+        batch = {k: v for k, v in ins.items()}
+        bshard = make_shardings(mesh, pc, batch_specs(cfg, batch), batch)
+        step_fn = make_train_step(cfg, OPT, pc)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(pshard, oshard, bshard, rep),
+            out_shardings=(pshard, oshard, None),
+            donate_argnums=(0, 1),
+        )
+        args = (params, opt, batch, jax.ShapeDtypeStruct((), jnp.int32))
+        return jitted, args
+
+    if shape.kind == "prefill":
+        B, S = shape.global_batch, shape.seq_len
+        enc_len = src_len(cfg, shape) if cfg.is_encdec else 0
+        cache = abstract_cache(cfg, B, S, enc_len)
+        cshard = make_shardings(
+            mesh, pc, cache_specs(cfg, cache, pc, model_size), cache
+        )
+        bshard = make_shardings(mesh, pc, batch_specs(cfg, ins), ins)
+
+        if cfg.is_encdec:
+
+            def prefill_fn(params, tokens, src_embeds, cache):
+                enc_out = encode(params, cfg, src_embeds)
+                return prefill(params, cfg, tokens, cache, enc_out=enc_out)
+
+            jitted = jax.jit(
+                prefill_fn,
+                in_shardings=(pshard, bshard["tokens"], bshard["src_embeds"], cshard),
+                out_shardings=(None, cshard),
+                donate_argnums=(3,),
+            )
+            args = (params, ins["tokens"], ins["src_embeds"], cache)
+        else:
+
+            def prefill_fn(params, tokens, cache):
+                return prefill(params, cfg, tokens, cache)
+
+            jitted = jax.jit(
+                prefill_fn,
+                in_shardings=(pshard, bshard["tokens"], cshard),
+                out_shardings=(None, cshard),
+                donate_argnums=(2,),
+            )
+            args = (params, ins["tokens"], cache)
+        return jitted, args
+
+    # decode
+    B, S = shape.global_batch, shape.seq_len
+    enc_len = src_len(cfg, shape) if cfg.is_encdec else 0
+    cache = abstract_cache(cfg, B, S, enc_len)
+    cshard = make_shardings(mesh, pc, cache_specs(cfg, cache, pc, model_size), cache)
+    tok_shard = make_shardings(
+        mesh, pc, batch_specs(cfg, {"token": ins["token"]}),
+        {"token": ins["token"]},
+    )["token"]
+
+    def decode_fn(params, token, cache, pos):
+        return decode_step(params, cfg, token, cache, pos)
+
+    jitted = jax.jit(
+        decode_fn,
+        in_shardings=(pshard, tok_shard, cshard, rep),
+        out_shardings=(None, cshard),
+        donate_argnums=(2,),
+    )
+    args = (params, ins["token"], cache, ins["pos"])
+    return jitted, args
+
+
+def analyze(compiled, cfg, shape, mesh) -> dict:
+    n_dev = mesh.size
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    memd = {}
+    if mem is not None:
+        for k in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "generated_code_size_in_bytes",
+            "alias_size_in_bytes",
+        ):
+            memd[k] = int(getattr(mem, k, 0))
+    hlo = compiled.as_text()
+    stats = hlo_stats.analyze_hlo(hlo)  # trip-count-aware (see hlo_stats)
+    flops = stats["flops"]
+    bytes_acc = stats["hbm_bytes_est"]
+    coll = stats["collectives"]
+
+    # roofline terms (per device; the module is the SPMD per-device program)
+    t_compute = flops / HW["peak_bf16_flops"]
+    t_memory = bytes_acc / HW["hbm_bw"]
+    # bf16 adjustment: the host backend upcasts bf16 dots to f32, so their
+    # partial-sum collectives appear at 2x the bytes a TPU build moves.
+    wire = coll["total_wire_bytes"]
+    if jnp.dtype(cfg.compute_dtype) == jnp.bfloat16:
+        wire -= 0.5 * coll.get("total_f32_wire_bytes", 0.0)
+    dcn = coll["total_dcn_wire_bytes"]
+    t_coll = max(wire - dcn, 0.0) / HW["ici_bw"] + dcn / HW["dcn_bw"]
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+
+    n_total = param_count(cfg)
+    n_active = param_count(cfg, active=True)
+    tokens = shape.global_batch * (
+        shape.seq_len if shape.kind in ("train", "prefill") else 1
+    )
+    model_flops = (
+        6.0 * n_active * tokens
+        if shape.kind == "train"
+        else 2.0 * n_active * tokens
+    )
+    return {
+        "devices": n_dev,
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_acc,
+        "cost_analysis_flops": float(cost.get("flops", 0.0)),
+        "cost_analysis_bytes": float(cost.get("bytes accessed", 0.0)),
+        "collectives": coll,
+        "memory": memd,
+        "roofline": {
+            "t_compute_s": t_compute,
+            "t_memory_s": t_memory,
+            "t_collective_s": t_coll,
+            "dominant": dominant,
+        },
+        "model_flops_total": model_flops,
+        "model_flops_per_device": model_flops / n_dev,
+        "useful_flops_ratio": (model_flops / n_dev) / flops if flops else 0.0,
+        "params_total": n_total,
+        "params_active": n_active,
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             pc: ParallelConfig = ParallelConfig(), cfg: ModelConfig = None,
+             verbose: bool = True) -> dict:
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    report = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "parallel": dataclasses.asdict(pc),
+    }
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        report.update(status="skipped", reason=reason)
+        return report
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    try:
+        from ..distributed.ctx import activation_sharding
+
+        t0 = time.perf_counter()
+        with activation_sharding(mesh, pc):
+            jitted, args = build_cell(cfg, shape, mesh, pc)
+            lowered = jitted.lower(*args)
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        t2 = time.perf_counter()
+        report.update(
+            status="ok",
+            lower_time_s=round(t1 - t0, 2),
+            compile_time_s=round(t2 - t1, 2),
+            **analyze(compiled, cfg, shape, mesh),
+        )
+        if verbose:
+            mem = report["memory"]
+            args_gb = mem.get("argument_size_in_bytes", 0) / 1e9
+            tmp_gb = mem.get("temp_size_in_bytes", 0) / 1e9
+            r = report["roofline"]
+            print(
+                f"[ok] {arch} x {shape_name} x {mesh_name}: "
+                f"args {args_gb:.2f} GB/dev, temp {tmp_gb:.2f} GB/dev, "
+                f"compute {r['t_compute_s']*1e3:.2f} ms, "
+                f"memory {r['t_memory_s']*1e3:.2f} ms, "
+                f"collective {r['t_collective_s']*1e3:.2f} ms "
+                f"-> {r['dominant']}-bound "
+                f"(lower {report['lower_time_s']}s, "
+                f"compile {report['compile_time_s']}s)",
+                flush=True,
+            )
+    except Exception as e:  # a failure here is a bug in the system
+        report.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[ERR] {arch} x {shape_name} x {mesh_name}: {e}", flush=True)
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-fsdp", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    pods = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.multi_pod
+    ]
+    pc = ParallelConfig(fsdp=not args.no_fsdp)
+
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in pods:
+                rep = run_cell(arch, shape_name, mp, pc)
+                tag = f"{arch}_{shape_name}_{rep['mesh']}".replace(".", "_")
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rep, f, indent=1)
+                n_ok += rep["status"] == "ok"
+                n_skip += rep["status"] == "skipped"
+                n_err += rep["status"] == "error"
+    print(f"dry-run: {n_ok} ok, {n_skip} skipped (documented), {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,497 @@
+"""Post-SPMD HLO analysis: FLOPs, memory-traffic estimate, collective bytes.
+
+Why not ``compiled.cost_analysis()``: on the host backend it counts
+``while`` (lax.scan) bodies exactly ONCE, so any scanned-layer model is
+undercounted by the layer count; and it has no collective accounting.  We
+therefore walk the compiled per-device HLO text ourselves:
+
+  * computations are parsed into blocks; call edges (while/fusion/call/
+    conditional/to_apply) form a DAG,
+  * ``while`` ops carry ``backend_config={"known_trip_count":{"n":...}}`` —
+    bodies are multiplied by their trip count,
+  * dot/convolution FLOPs are computed exactly from shapes + dnums
+    (elementwise FLOPs are ignored — the MXU roofline term is matmul
+    FLOPs; VPU work is folded into the memory term),
+  * memory traffic is estimated as every op's OUTPUT bytes (each
+    intermediate written once; fusions count their root only) — operands
+    are other ops' outputs, so reads are counted at their producer; this
+    approximates a perfectly-fused TPU schedule's HBM writes and is
+    reported alongside cost_analysis' (CPU-flavored) bytes,
+  * collectives get ring-model wire factors:
+      all-reduce 2(n-1)/n, all-gather/reduce-scatter/all-to-all (n-1)/n,
+      collective-permute 1.
+
+Bytes are per-device (the module is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["HloCost", "analyze_hlo", "collective_stats", "op_census",
+           "parse_shape_bytes"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_list(sig: str):
+    out = []
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = [int(d) for d in dims.split(",") if d]
+        out.append((dt, shape))
+    return out
+
+
+def parse_shape_bytes(sig: str) -> int:
+    total = 0
+    for dt, shape in _shape_list(sig):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _numel(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    if "source_target_pairs" in line:
+        return 2
+    return 1
+
+
+def _group_stride(line: str) -> int:
+    """Max participant stride within a replica group (>=256 => crosses the
+    pod/DCN boundary on the (2,16,16) production mesh)."""
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",") if x.strip()]
+        if len(ids) >= 2:
+            return max(abs(b - a) for a, b in zip(ids, ids[1:]))
+        return 0
+    # iota form: [G,n]<=[d0,d1,...]T(p0,p1,...)
+    m = re.search(r"replica_groups=\[\d+,\d+\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?",
+                  line)
+    if m:
+        dims = [int(x) for x in m.group(1).split(",")]
+        perm = ([int(x) for x in m.group(2).split(",")]
+                if m.group(2) else list(range(len(dims))))
+        # stride between consecutive in-group elements = stride of the
+        # last transposed axis in the original iota layout
+        last_axis = perm[-1]
+        stride = 1
+        for d in dims[last_axis + 1:]:
+            stride *= d
+        return stride
+    m = re.search(r"source_target_pairs=\{\{(\d+),(\d+)\}", line)
+    if m:
+        return abs(int(m.group(2)) - int(m.group(1)))
+    return 0
+
+
+def _wire_factor(kind: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if kind == "collective-permute":
+        return 1.0
+    return (n - 1) / n
+
+
+class _Op:
+    __slots__ = ("name", "out_sig", "opcode", "line", "calls", "trip")
+
+    def __init__(self, name, out_sig, opcode, line):
+        self.name = name
+        self.out_sig = out_sig
+        self.opcode = opcode
+        self.line = line
+        self.calls: list[tuple[str, float]] = []  # (computation, multiplier)
+        self.trip = 1
+
+
+_OP_RE = re.compile(
+    r"\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[\w\[\],\s{}/#]*?\)?)\s+([\w\-]+)\("
+)
+_CALL_ATTRS = (
+    ("body=", 1),
+    ("condition=", 1),
+    ("calls=", 1),
+    ("to_apply=", 1),
+)
+_NAME_RE = re.compile(r"[%]?([\w.\-]+)")
+
+
+def _parse_computations(hlo_text: str) -> tuple[dict, str]:
+    comps: dict[str, list[_Op]] = {}
+    entry = None
+    cur = None
+    for raw in hlo_text.splitlines():
+        line = re.sub(r"/\*[^*]*\*/", "", raw.rstrip())  # strip /*index=N*/
+        # computation header: "%name (params...) -> type {"; parameter
+        # signatures may contain nested parens (tuple types), so match the
+        # name + trailing "{" and the absence of "=" before the paren.
+        if (
+            line.endswith("{")
+            and "->" in line
+            and "=" not in line.split("(", 1)[0]
+        ):
+            header = re.match(r"\s*(ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+            if header:
+                cur = header.group(2)
+                comps[cur] = []
+                if header.group(1):
+                    entry = cur
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        op = _Op(m.group(1), m.group(2), m.group(3), line)
+        # call edges
+        for attr, mult in _CALL_ATTRS:
+            idx = 0
+            while True:
+                j = line.find(attr, idx)
+                if j < 0:
+                    break
+                nm = _NAME_RE.match(line[j + len(attr):])
+                if nm:
+                    op.calls.append((nm.group(1), mult))
+                idx = j + len(attr)
+        bm = re.search(r"branch_computations=\{([^}]*)\}", line)
+        if bm:
+            for part in bm.group(1).split(","):
+                nm = _NAME_RE.match(part.strip())
+                if nm:
+                    op.calls.append((nm.group(1), 1))
+        tm = re.search(r'known_trip_count[^0-9]*(\d+)', line)
+        if tm and op.opcode == "while":
+            op.trip = int(tm.group(1))
+        comps[cur].append(op)
+    return comps, entry
+
+
+_OPERANDS_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+
+
+def _operand_names(op: _Op) -> list:
+    """Operand names of the op (compiled HLO prints names only)."""
+    after = op.line.split(op.opcode + "(", 1)
+    if len(after) < 2:
+        return []
+    depth, out, cur = 1, [], []
+    for ch in after[1]:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if ch == "," and depth == 1:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    return [re.sub(r"^%", "", x.split(" ")[-1]) for x in out if x]
+
+
+def _dot_flops(op: _Op, sigmap: dict) -> float:
+    # output numel x 2 x prod(lhs contracting dims)
+    shapes = _shape_list(op.out_sig)
+    if not shapes:
+        return 0.0
+    out_numel = sum(_numel(s) for _, s in shapes)
+    names = _operand_names(op)
+    lhs = []
+    if names and names[0] in sigmap:
+        ls = _shape_list(sigmap[names[0]])
+        lhs = ls[0][1] if ls else []
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    contract = 1
+    if m and lhs:
+        for d in m.group(1).split(","):
+            if d:
+                contract *= lhs[int(d)]
+    return 2.0 * out_numel * contract
+
+
+def _conv_flops(op: _Op, sigmap: dict) -> float:
+    shapes = _shape_list(op.out_sig)
+    if not shapes:
+        return 0.0
+    out_numel = sum(_numel(s) for _, s in shapes)
+    names = _operand_names(op)
+    kern = []
+    if len(names) >= 2 and names[1] in sigmap:
+        ks = _shape_list(sigmap[names[1]])
+        kern = ks[0][1] if ks else []
+    if not kern:
+        return 0.0
+    # per-output MACs = kernel numel / output features (depthwise => window)
+    out_feat = kern[-1] if kern else 1
+    per_out = _numel(kern) / max(out_feat, 1)
+    return 2.0 * out_numel * per_out
+
+
+class HloCost:
+    def __init__(self):
+        self.flops = 0.0
+        self.out_bytes = 0.0  # memory-traffic estimate
+        self.coll = defaultdict(lambda: {"count": 0.0, "bytes": 0.0,
+                                         "wire_bytes": 0.0,
+                                         "dcn_wire_bytes": 0.0,
+                                         "max_group": 1})
+
+    def add(self, other: "HloCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.out_bytes += other.out_bytes * mult
+        for k, v in other.coll.items():
+            s = self.coll[k]
+            s["count"] += v["count"] * mult
+            s["bytes"] += v["bytes"] * mult
+            s["wire_bytes"] += v["wire_bytes"] * mult
+            s["dcn_wire_bytes"] += v["dcn_wire_bytes"] * mult
+            s["f32_wire_bytes"] = (
+                s.get("f32_wire_bytes", 0.0)
+                + v.get("f32_wire_bytes", 0.0) * mult
+            )
+            s["max_group"] = max(s["max_group"], v["max_group"])
+
+
+_NO_TRAFFIC = {
+    "get-tuple-element", "tuple", "parameter", "constant", "bitcast",
+    "copy-done", "all-reduce-done", "all-gather-done", "copy-start",
+    "after-all", "partition-id", "replica-id", "convert", "copy",
+    # control-flow plumbing: the bodies' interior ops are counted instead
+    "while", "conditional", "call",
+}
+_CONVERT_ONLY = {"parameter", "convert", "copy", "bitcast", "transpose",
+                 "reshape"}
+
+
+def _dus_update_bytes(callee_ops, op, sigmap_local) -> int:
+    """For (fusions rooted in) dynamic-update-slice, the write is the
+    UPDATE slice, not the full buffer (in-place DUS on TPU)."""
+    for o in callee_ops:
+        if o.opcode == "dynamic-update-slice":
+            names = _operand_names(o)
+            if len(names) >= 2 and names[1] in sigmap_local:
+                return parse_shape_bytes(sigmap_local[names[1]])
+    return -1
+
+
+def analyze_hlo(hlo_text: str) -> dict:
+    comps, entry = _parse_computations(hlo_text)
+    memo: dict[str, HloCost] = {}
+    sigmap: dict[str, str] = {}
+    # fusions that only convert/copy/reshape exist because the CPU backend
+    # computes bf16 in f32; a TPU build has no such traffic — skip them.
+    convert_fusions = {
+        name
+        for name, ops in comps.items()
+        if ops and all(o.opcode in _CONVERT_ONLY for o in ops)
+    }
+    for ops in comps.values():
+        for op in ops:
+            sigmap[op.name] = op.out_sig
+
+    def cost_of(name: str, in_fusion: bool) -> HloCost:
+        key = name + ("#f" if in_fusion else "")
+        if key in memo:
+            return memo[key]
+        c = HloCost()
+        memo[key] = c  # guards (acyclic anyway)
+        for op in comps.get(name, []):
+            oc = op.opcode
+            base = oc.replace("-start", "")
+            if oc == "dot":
+                c.flops += _dot_flops(op, sigmap)
+            elif oc == "convolution":
+                c.flops += _conv_flops(op, sigmap)
+            if base in _COLLECTIVES:
+                b = parse_shape_bytes(op.out_sig)
+                n = _group_size(op.line)
+                wire = b * _wire_factor(base, n)
+                s = c.coll[base]
+                s["count"] += 1
+                s["bytes"] += b
+                s["wire_bytes"] += wire
+                if _group_stride(op.line) >= 256:
+                    s["dcn_wire_bytes"] += wire
+                if "f32[" in op.out_sig and "bf16[" not in op.out_sig:
+                    # the host backend computes bf16 dots in f32, so
+                    # partial-sum collectives appear as f32; a TPU build
+                    # reduces in bf16 (see dryrun bf16-adjusted term)
+                    s["f32_wire_bytes"] = s.get("f32_wire_bytes", 0.0) + wire
+                s["max_group"] = max(s["max_group"], n)
+            if not in_fusion and oc not in _NO_TRAFFIC:
+                is_convert_fusion = oc == "fusion" and any(
+                    callee in convert_fusions for callee, _ in op.calls
+                )
+                if not is_convert_fusion:
+                    b = parse_shape_bytes(op.out_sig)
+                    if oc == "dynamic-update-slice":
+                        names = _operand_names(op)
+                        if len(names) >= 2 and names[1] in sigmap:
+                            b = min(b, parse_shape_bytes(sigmap[names[1]]))
+                    elif oc == "fusion":
+                        for callee, _ in op.calls:
+                            ub = _dus_update_bytes(
+                                comps.get(callee, []), op,
+                                {o.name: o.out_sig
+                                 for o in comps.get(callee, [])},
+                            )
+                            if ub >= 0:
+                                b = min(b, ub)
+                    c.out_bytes += b
+            for callee, _ in op.calls:
+                sub_fusion = in_fusion or (oc == "fusion")
+                sub = cost_of(callee, sub_fusion)
+                c.add(sub, mult=op.trip)
+        return c
+
+    total = cost_of(entry, False) if entry else HloCost()
+    # parameters (weights, caches, batch) are read from HBM at least once
+    # per step — decode's dominant traffic; writes are counted at producers
+    for op in comps.get(entry, []):
+        if op.opcode == "parameter":
+            total.out_bytes += parse_shape_bytes(op.out_sig)
+    coll = {k: dict(v) for k, v in total.coll.items()}
+    coll["total_wire_bytes"] = sum(v["wire_bytes"] for v in total.coll.values())
+    coll["total_dcn_wire_bytes"] = sum(
+        v["dcn_wire_bytes"] for v in total.coll.values()
+    )
+    coll["total_f32_wire_bytes"] = sum(
+        v.get("f32_wire_bytes", 0.0) for v in total.coll.values()
+    )
+    coll["total_bytes"] = sum(v["bytes"] for v in total.coll.values())
+    return {
+        "flops": total.flops,
+        "hbm_bytes_est": total.out_bytes,
+        "collectives": coll,
+    }
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Trip-count-aware collective stats (see analyze_hlo)."""
+    return analyze_hlo(hlo_text)["collectives"]
+
+
+def top_collectives(hlo_text: str, k: int = 12) -> list:
+    """Largest collective ops with their source op_name metadata — the
+    'which line of model code caused this traffic' profiler view."""
+    comps, entry = _parse_computations(hlo_text)
+    # compute trip multiplier per computation via the call graph
+    mult: dict[str, float] = {entry: 1.0}
+    order = [entry]
+    seen = {entry}
+    while order:
+        name = order.pop()
+        for op in comps.get(name, []):
+            for callee, _ in op.calls:
+                m = mult.get(name, 1.0) * op.trip
+                mult[callee] = max(mult.get(callee, 0.0), m)
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+    rows = []
+    for cname, ops in comps.items():
+        for op in ops:
+            base = op.opcode.replace("-start", "")
+            if base not in _COLLECTIVES or op.opcode.endswith("-done"):
+                continue
+            b = parse_shape_bytes(op.out_sig)
+            n = _group_size(op.line)
+            m = re.search(r'op_name="([^"]*)"', op.line)
+            src = m.group(1) if m else "?"
+            trips = mult.get(cname, 1.0)
+            rows.append({
+                "kind": base, "bytes": b, "trips": trips,
+                "total_wire": b * trips * _wire_factor(base, n),
+                "group": n, "sig": op.out_sig[:60], "src": src[-110:],
+            })
+    rows.sort(key=lambda r: -r["total_wire"])
+    return rows[:k]
+
+
+def top_traffic(hlo_text: str, k: int = 12) -> list:
+    """Largest HBM-traffic ops (output bytes x trips), with source
+    metadata — the memory-term profiler twin of top_collectives."""
+    comps, entry = _parse_computations(hlo_text)
+    mult: dict[str, float] = {entry: 1.0}
+    order = [entry]
+    seen = {entry}
+    while order:
+        name = order.pop()
+        for op in comps.get(name, []):
+            for callee, _ in op.calls:
+                m = mult.get(name, 1.0) * op.trip
+                mult[callee] = max(mult.get(callee, 0.0), m)
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+    convert_fusions = {
+        name for name, ops in comps.items()
+        if ops and all(o.opcode in _CONVERT_ONLY for o in ops)
+    }
+    rows = []
+    for cname, ops in comps.items():
+        if "fused" in cname or cname in convert_fusions:
+            continue  # count fusion roots at their call site only
+        for op in ops:
+            if op.opcode in _NO_TRAFFIC:
+                continue
+            if op.opcode == "fusion" and any(
+                c in convert_fusions for c, _ in op.calls
+            ):
+                continue
+            b = parse_shape_bytes(op.out_sig)
+            trips = mult.get(cname, 1.0)
+            if b * trips < 1e6:
+                continue
+            m = re.search(r'op_name="([^"]*)"', op.line)
+            rows.append({
+                "opcode": op.opcode, "bytes": b, "trips": trips,
+                "total": b * trips, "sig": op.out_sig[:48],
+                "src": (m.group(1) if m else "?")[-100:],
+            })
+    rows.sort(key=lambda r: -r["total"])
+    return rows[:k]
+
+
+def op_census(hlo_text: str, top: int = 15) -> list:
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*(?:ROOT )?[%\w.\-]+ = \S+ ([\w\-]+)\(", line)
+        if m:
+            counts[m.group(1)] += 1
+    return sorted(counts.items(), key=lambda kv: -kv[1])[:top]

@@ -1,0 +1,49 @@
+"""Production mesh construction.
+
+Meshes are built by FUNCTIONS (never at module import) so importing this
+module cannot touch jax device state before the launcher sets XLA_FLAGS.
+
+Production target: TPU v5e pods, 256 chips each.
+  single-pod  (16, 16)    ("data", "model")
+  multi-pod   (2, 16, 16) ("pod", "data", "model")  — 512 chips; the pod
+              axis crosses the DCN boundary (slower links), which is why
+              pipeline/pure-DP parallelism lives there.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+__all__ = ["make_production_mesh", "make_local_mesh", "HW"]
+
+
+# TPU v5e hardware constants used by the roofline analysis
+HW = {
+    "peak_bf16_flops": 197e12,  # per chip
+    "hbm_bw": 819e9,  # bytes/s per chip
+    "ici_bw": 50e9,  # bytes/s per link (~49 GB/s)
+    "dcn_bw": 6.25e9,  # bytes/s per host cross-pod (50 Gbps)
+    "hbm_bytes": 16e9,  # per chip
+}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(axes=("data", "model"), shape=None):
+    """Mesh over whatever devices exist (tests/examples)."""
+    n = jax.device_count()
+    if shape is None:
+        if len(axes) == 1:
+            shape = (n,)
+        else:
+            m = 1
+            for f in (2, 4, 8):
+                if n % f == 0 and f <= n:
+                    m = f
+            shape = (n // m, m) if len(axes) == 2 else (1, n // m, m)
+    assert int(np.prod(shape)) == n, f"{shape} != {n} devices"
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,77 @@
+"""Abstract input specs (ShapeDtypeStruct) per (arch config x input shape).
+
+No device memory is ever allocated: parameters, optimizer state, caches and
+batches are all eval_shape'd.  These feed ``jit(...).lower()`` in the
+dry-run and define the public contract for train.py / serve.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.shapes import Shape, src_len
+from ..models.config import ModelConfig
+from ..models.transformer import init_cache, init_params
+from ..optim.adamw import AdamWConfig, adamw_init
+
+__all__ = ["abstract_params", "abstract_opt", "abstract_cache", "input_specs"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+@functools.lru_cache(maxsize=64)
+def _abstract_params_cached(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_params(cfg: ModelConfig):
+    return _abstract_params_cached(cfg)
+
+
+def abstract_opt(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    params = abstract_params(cfg)
+    return jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, s_max: int, enc_len: int = 0):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, s_max, enc_len=enc_len,
+                           dtype=jnp.dtype(cfg.compute_dtype))
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: Shape) -> dict:
+    """Model inputs for this cell (excl. params/opt/cache).
+
+    train    {"tokens": (B,S), "labels": (B,S)} [+ src_embeds]
+    prefill  {"tokens": (B,S)} [+ src_embeds]
+    decode   {"token": (B,1), "pos": scalar}
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        out = {
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+        if cfg.is_encdec:
+            out["src_embeds"] = _sds(
+                (B, src_len(cfg, shape), cfg.frontend_dim), jnp.float32
+            )
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.is_encdec:
+            out["src_embeds"] = _sds(
+                (B, src_len(cfg, shape), cfg.frontend_dim), jnp.float32
+            )
+        return out
+    if shape.kind == "decode":
+        return {
+            "token": _sds((B, 1), jnp.int32),
+            "pos": _sds((), jnp.int32),
+        }
+    raise ValueError(shape.kind)

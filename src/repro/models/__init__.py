@@ -1,0 +1,21 @@
+"""Model zoo: configs + functional transformer/SSM/MoE implementations."""
+from .config import (
+    GroupSpec,
+    LayerSpec,
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    SableConfig,
+    SSMConfig,
+    jamba_groups,
+    param_count,
+    uniform_groups,
+)
+from .transformer import (
+    decode_step,
+    encode,
+    forward_train,
+    init_cache,
+    init_params,
+    prefill,
+)

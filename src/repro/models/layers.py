@@ -1,0 +1,117 @@
+"""Shared layer primitives: norms, RoPE, FFNs (dense + SABLE-sparse)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.ctx import MODEL, fetch
+from ..sparse.linear import BlockPattern, random_pattern, sparse_matmul
+from .config import ModelConfig
+
+__all__ = [
+    "rmsnorm",
+    "rope",
+    "ffn_apply",
+    "ffn_init",
+    "dense_init",
+    "sable_patterns",
+]
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embeddings.  x: (B, S, H, D), positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- #
+# FFN
+# ---------------------------------------------------------------------- #
+def dense_init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def sable_patterns(cfg: ModelConfig) -> dict:
+    """Static block patterns for the sparsified FFN matrices (shared across
+    layers — one staged executable pattern serves the whole stack)."""
+    sb = cfg.sable
+    pat_in = random_pattern(
+        cfg.d_model, cfg.d_ff, sb.block_m, sb.block_n, sb.density, seed=sb.seed
+    )
+    pat_out = random_pattern(
+        cfg.d_ff, cfg.d_model, sb.block_n, sb.block_m, sb.density, seed=sb.seed + 1
+    )
+    return {"in": pat_in, "out": pat_out}
+
+
+def ffn_init(key, cfg: ModelConfig, d_ff: int = None, dtype=jnp.float32) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    if cfg.sable is not None and cfg.sable.target == "ffn":
+        pats = sable_patterns(cfg)
+        p_in, p_out = pats["in"], pats["out"]
+        out = {
+            "w1": dense_init(ks[0], (p_in.n_tiles, p_in.tm, p_in.tk), 1 / np.sqrt(d), dtype),
+            "w2": dense_init(ks[1], (p_out.n_tiles, p_out.tm, p_out.tk), 1 / np.sqrt(d_ff), dtype),
+        }
+        if cfg.ffn_type == "swiglu":
+            out["w3"] = dense_init(
+                ks[2], (p_in.n_tiles, p_in.tm, p_in.tk), 1 / np.sqrt(d), dtype
+            )
+        return out
+    out = {
+        "w1": dense_init(ks[0], (d, d_ff), dtype=dtype),
+        "w2": dense_init(ks[1], (d_ff, d), dtype=dtype),
+    }
+    if cfg.ffn_type == "swiglu":
+        out["w3"] = dense_init(ks[2], (d, d_ff), dtype=dtype)
+    return out
+
+
+def _act(cfg: ModelConfig, h: jnp.ndarray) -> jnp.ndarray:
+    if cfg.ffn_type == "relu2":  # nemotron squared-ReLU
+        r = jax.nn.relu(h)
+        return r * r
+    if cfg.ffn_type == "gelu":
+        return jax.nn.gelu(h)
+    return jax.nn.silu(h)
+
+
+def ffn_apply(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Dense or SABLE block-sparse FFN (swiglu / relu^2 / gelu)."""
+    if cfg.sable is not None and p["w1"].ndim == 3:
+        pats = sable_patterns(cfg)
+        p_in, p_out = pats["in"], pats["out"]
+        h = sparse_matmul(x, fetch(p["w1"].astype(x.dtype), MODEL), p_in)
+        if cfg.ffn_type == "swiglu":
+            g = sparse_matmul(x, fetch(p["w3"].astype(x.dtype), MODEL), p_in)
+            h = jax.nn.silu(h) * g
+        else:
+            h = _act(cfg, h)
+        return sparse_matmul(h, fetch(p["w2"].astype(x.dtype), MODEL), p_out)
+    h = x @ fetch(p["w1"].astype(x.dtype), None, MODEL)
+    if cfg.ffn_type == "swiglu":
+        h = jax.nn.silu(h) * (x @ fetch(p["w3"].astype(x.dtype), None, MODEL))
+    else:
+        h = _act(cfg, h)
+    return h @ fetch(p["w2"].astype(x.dtype), MODEL, None)

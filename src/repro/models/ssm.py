@@ -1,0 +1,214 @@
+"""Mamba-2 (SSD — state-space duality) mixer.
+
+Train/prefill uses the chunked SSD algorithm: intra-chunk 'attention-like'
+quadratic term + inter-chunk recurrent state passing via ``lax.scan`` —
+O(S * Q) work with chunk size Q, fully parallel within chunks (MXU-friendly
+einsums).  Decode is the O(1) recurrent update on a (B, H, N, P) state.
+
+Cache layout: {"conv": (B, d_conv-1, ch), "ssm": (B, H, N, P)}.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.ctx import MODEL, fetch
+from .config import ModelConfig
+from .layers import dense_init, rmsnorm
+
+__all__ = ["mamba_init", "mamba_apply", "mamba_decode", "ssd_chunked"]
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    gn = s.n_groups * s.d_state
+    conv_ch = di + 2 * gn
+    return s, di, nh, gn, conv_ch
+
+
+def mamba_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    """Projections are stored unfused (z/x/B/C/dt separately) so each output
+    dimension shards cleanly over the tensor axis (the fused layout would
+    put shard boundaries inside the z/x/B/C split points)."""
+    s, di, nh, gn, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "in_z": dense_init(ks[0], (d, di), dtype=dtype),
+        "in_x": dense_init(ks[1], (d, di), dtype=dtype),
+        "in_b": dense_init(ks[2], (d, gn), dtype=dtype),
+        "in_c": dense_init(ks[3], (d, gn), dtype=dtype),
+        "in_dt": dense_init(ks[4], (d, nh), dtype=dtype),
+        "conv_w": dense_init(ks[5], (s.d_conv, conv_ch), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((nh,), dtype),  # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), dtype),
+        "dt_bias": jnp.full((nh,), np.log(np.expm1(0.01)), dtype),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[6], (di, d), dtype=dtype),
+    }
+
+
+def _in_proj(p, x):
+    """Apply the unfused input projections; returns (z, xbc, dt_raw)."""
+    z = x @ fetch(p["in_z"].astype(x.dtype), None, MODEL)
+    xbc = jnp.concatenate(
+        [
+            x @ fetch(p["in_x"].astype(x.dtype), None, MODEL),
+            x @ fetch(p["in_b"].astype(x.dtype), None, MODEL),
+            x @ fetch(p["in_c"].astype(x.dtype), None, MODEL),
+        ],
+        axis=-1,
+    )
+    dt_raw = x @ fetch(p["in_dt"].astype(x.dtype), None, MODEL)
+    return z, xbc, dt_raw
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray):
+    """Depthwise causal conv, window d_conv.  xbc: (B, S, ch)."""
+    d_conv, ch = w.shape
+    out = jax.lax.conv_general_dilated(
+        xbc,
+        w[:, None, :].astype(xbc.dtype),  # (W, 1, ch)
+        window_strides=(1,),
+        padding=[(d_conv - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=ch,
+    )
+    return out + b.astype(xbc.dtype)
+
+
+def ssd_chunked(xs, dt, A, B_, C_, chunk: int):
+    """Chunked SSD.  xs: (B,S,H,P), dt: (B,S,H) (post-softplus), A: (H,)<0,
+    B_/C_: (B,S,H,N).  Returns (y, final_state (B,H,N,P))."""
+    Bb, S, H, P = xs.shape
+    N = B_.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        z = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        xs, dt, B_, C_ = z(xs), z(dt), z(B_), z(C_)
+    Sp = S + pad
+    nc = Sp // Q
+
+    def c(t):  # chunkify: (B, S, ...) -> (B, nc, Q, ...)
+        return t.reshape(Bb, nc, Q, *t.shape[2:])
+
+    xs_c, dt_c, B_c, C_c = c(xs), c(dt), c(B_), c(C_)
+    dA = dt_c * A  # (B,nc,Q,H), negative
+    cums = jnp.cumsum(dA, axis=2)  # inclusive
+
+    # intra-chunk: y_i += sum_{j<=i} exp(cums_i - cums_j) dt_j (C_i.B_j) x_j
+    diff = cums[:, :, :, None, :] - cums[:, :, None, :, :]  # (B,nc,Q,Q,H) [i,j]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    L = jnp.where(tri, jnp.exp(diff), 0.0).astype(xs.dtype)
+    cb = jnp.einsum("bcihn,bcjhn->bcijh", C_c, B_c)
+    xdt = xs_c * dt_c[..., None]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", cb * L, xdt)
+
+    # per-chunk outgoing state: sum_j exp(cums_Q - cums_j) B_j (dt_j x_j)
+    decay_end = jnp.exp(cums[:, :, -1:, :] - cums)  # (B,nc,Q,H)
+    states = jnp.einsum(
+        "bcjhn,bcjhp->bchnp", B_c * decay_end[..., None].astype(xs.dtype), xdt
+    )
+
+    # inter-chunk scan over nc
+    csum = cums[:, :, -1, :]  # (B,nc,H)
+    def step(carry, inp):
+        s_c, dAc = inp
+        new = carry * jnp.exp(dAc)[..., None, None].astype(carry.dtype) + s_c
+        return new, carry  # emit state at chunk START
+
+    final, starts = jax.lax.scan(
+        step,
+        jnp.zeros((Bb, H, N, P), xs.dtype),
+        (states.transpose(1, 0, 2, 3, 4), csum.transpose(1, 0, 2)),
+    )
+    starts = starts.transpose(1, 0, 2, 3, 4)  # (B,nc,H,N,P)
+    y_inter = jnp.einsum(
+        "bcihn,bchnp->bcihp",
+        C_c * jnp.exp(cums)[..., None].astype(xs.dtype),
+        starts,
+    )
+    y = (y_intra + y_inter).reshape(Bb, Sp, H, P)
+    return y[:, :S], final
+
+
+def mamba_apply(
+    p: dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    return_cache: bool = False,
+):
+    """Full-sequence forward (train / prefill).  Returns (out, cache|None)."""
+    s, di, nh, gn, conv_ch = _dims(cfg)
+    Bb, S, d = x.shape
+    z, xbc, dt_raw = _in_proj(p, x)
+
+    conv_out = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    conv_act = jax.nn.silu(conv_out)
+    xs = conv_act[..., :di]
+    B_ = conv_act[..., di : di + gn].reshape(Bb, S, s.n_groups, s.d_state)
+    C_ = conv_act[..., di + gn :].reshape(Bb, S, s.n_groups, s.d_state)
+    rep = nh // s.n_groups
+    B_h = jnp.repeat(B_, rep, axis=2)
+    C_h = jnp.repeat(C_, rep, axis=2)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"]).astype(x.dtype)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32)).astype(x.dtype)
+    xh = xs.reshape(Bb, S, nh, s.head_dim)
+    y, final_state = ssd_chunked(xh, dt, A, B_h, C_h, s.chunk)
+    y = y + xh * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(Bb, S, di)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ fetch(p["out_proj"].astype(x.dtype), MODEL, None)
+
+    cache = None
+    if return_cache:
+        # conv state: last (d_conv-1) pre-activation conv inputs
+        tail = xbc[:, -(s.d_conv - 1) :, :]
+        pad = s.d_conv - 1 - tail.shape[1]
+        if pad > 0:
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        cache = {"conv": tail, "ssm": final_state}
+    return out, cache
+
+
+def mamba_decode(p: dict, x: jnp.ndarray, cfg: ModelConfig, cache: dict):
+    """Single-token recurrent step.  x: (B, 1, d)."""
+    s, di, nh, gn, conv_ch = _dims(cfg)
+    Bb = x.shape[0]
+    z, xbc, dt_raw = _in_proj(p, x[:, 0])
+
+    window = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # (B,dc,ch)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(x.dtype), p["conv_w"].astype(x.dtype))
+    conv_act = jax.nn.silu(conv_out + p["conv_b"].astype(x.dtype))
+    new_conv = window[:, 1:]
+
+    xs = conv_act[..., :di]
+    B_ = conv_act[..., di : di + gn].reshape(Bb, s.n_groups, s.d_state)
+    C_ = conv_act[..., di + gn :].reshape(Bb, s.n_groups, s.d_state)
+    rep = nh // s.n_groups
+    B_h = jnp.repeat(B_, rep, axis=1)  # (B,H,N)
+    C_h = jnp.repeat(C_, rep, axis=1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"]).astype(x.dtype)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32)).astype(x.dtype)
+    xh = xs.reshape(Bb, nh, s.head_dim)
+
+    dA = jnp.exp(dt * A)  # (B,H)
+    sstate = cache["ssm"]
+    new_state = sstate * dA[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", B_h, xh * dt[..., None]
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", C_h, new_state)
+    y = y + xh * p["D"].astype(x.dtype)[None, :, None]
+    y = y.reshape(Bb, di)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = (y @ fetch(p["out_proj"].astype(x.dtype), MODEL, None))[:, None, :]
+    return out, {"conv": new_conv, "ssm": new_state}

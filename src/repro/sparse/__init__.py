@@ -1,0 +1,2 @@
+"""NN integration of SABLE block-sparse weights."""
+from .linear import BlockPattern, pack_dense, random_pattern, sparse_matmul, prune_dense

@@ -1,0 +1,158 @@
+"""Block-sparse linear layers: SABLE staged patterns as NN weights.
+
+This is the paper's motivating application (NN inference over pruned
+weights with a fixed sparsity pattern — SpReg's setting).  A weight matrix
+is stored as uniform (tm, tk) tiles plus a *static* pattern (tile
+coordinates).  The pattern is structure — fixed at staging/trace time — so
+XLA compiles a specialized program per pattern, exactly the SABLE contract;
+the tile values are the trainable parameters.
+
+Compute strategies mirror ``core.staging`` backends:
+  * grouped einsum + scatter-add (XLA SPMD-shardable, default), or
+  * the Pallas ``bsr_spmm`` kernel (TPU hot path).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "BlockPattern",
+    "random_pattern",
+    "pack_dense",
+    "prune_dense",
+    "sparse_matmul",
+    "sparse_matmul_pallas",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPattern:
+    """Static block-sparsity pattern of a (d_in, d_out) weight matrix."""
+
+    d_in: int
+    d_out: int
+    tm: int  # tile rows (input dim)
+    tk: int  # tile cols (output dim)
+    rows: tuple  # (nt,) tile-row coordinates
+    cols: tuple  # (nt,) tile-col coordinates
+
+    @property
+    def n_tiles(self) -> int:
+        return len(self.rows)
+
+    @property
+    def density(self) -> float:
+        total = (self.d_in // self.tm) * (self.d_out // self.tk)
+        return self.n_tiles / max(total, 1)
+
+    def row_gather(self) -> np.ndarray:  # (nt, tm) input-dim indices
+        r = np.asarray(self.rows)[:, None] * self.tm + np.arange(self.tm)[None, :]
+        return r.astype(np.int32)
+
+    def col_gather(self) -> np.ndarray:  # (nt, tk) output-dim indices
+        c = np.asarray(self.cols)[:, None] * self.tk + np.arange(self.tk)[None, :]
+        return c.astype(np.int32)
+
+    def flops_fraction(self) -> float:
+        return self.density
+
+
+def random_pattern(
+    d_in: int, d_out: int, tm: int, tk: int, density: float, seed: int = 0
+) -> BlockPattern:
+    """Random pattern with full row/col coverage (every input tile-row and
+    output tile-col touched at least once, so no dead units)."""
+    assert d_in % tm == 0 and d_out % tk == 0, "dims must be tile-aligned"
+    R, C = d_in // tm, d_out // tk
+    rng = np.random.default_rng(seed)
+    n = max(int(round(density * R * C)), max(R, C))
+    # coverage diagonal first
+    diag = [(i % R, i % C) for i in range(max(R, C))]
+    chosen = set(diag)
+    all_cells = [(r, c) for r in range(R) for c in range(C)]
+    rng.shuffle(all_cells)
+    for cell in all_cells:
+        if len(chosen) >= n:
+            break
+        chosen.add(cell)
+    cells = sorted(chosen)
+    rows = tuple(r for r, _ in cells)
+    cols = tuple(c for _, c in cells)
+    return BlockPattern(d_in, d_out, tm, tk, rows, cols)
+
+
+def prune_dense(
+    w: np.ndarray, tm: int, tk: int, density: float
+) -> tuple[BlockPattern, np.ndarray]:
+    """Magnitude-based block pruning of a dense matrix -> (pattern, tiles).
+
+    Keeps the top ``density`` fraction of (tm, tk) blocks by Frobenius norm
+    — how a real pruning pipeline would produce SABLE patterns.
+    """
+    d_in, d_out = w.shape
+    assert d_in % tm == 0 and d_out % tk == 0
+    R, C = d_in // tm, d_out // tk
+    blocks = w.reshape(R, tm, C, tk).transpose(0, 2, 1, 3)  # (R, C, tm, tk)
+    norms = np.sqrt((blocks**2).sum(axis=(2, 3)))
+    n = max(int(round(density * R * C)), 1)
+    thresh = np.partition(norms.reshape(-1), -n)[-n]
+    keep = norms >= thresh
+    rs, cs = np.nonzero(keep)
+    order = np.lexsort((cs, rs))
+    rs, cs = rs[order], cs[order]
+    pattern = BlockPattern(d_in, d_out, tm, tk, tuple(rs.tolist()), tuple(cs.tolist()))
+    tiles = blocks[rs, cs]  # (nt, tm, tk)
+    return pattern, tiles
+
+
+def pack_dense(w: jnp.ndarray, pattern: BlockPattern) -> jnp.ndarray:
+    """Extract the pattern's tiles from a dense (d_in, d_out) matrix."""
+    R = pattern.d_in // pattern.tm
+    C = pattern.d_out // pattern.tk
+    blocks = w.reshape(R, pattern.tm, C, pattern.tk).transpose(0, 2, 1, 3)
+    return blocks[np.asarray(pattern.rows), np.asarray(pattern.cols)]
+
+
+def sparse_matmul(x: jnp.ndarray, tiles: jnp.ndarray, pattern: BlockPattern):
+    """y[..., d_out] = x[..., d_in] @ W_sparse.  Grouped-einsum backend:
+    gather input tile-rows, batched tile matmul, scatter-add output cols.
+    FLOPs = density * dense FLOPs."""
+    rg = jnp.asarray(pattern.row_gather())  # (nt, tm)
+    cg = jnp.asarray(pattern.col_gather())  # (nt, tk)
+    xg = x[..., rg]  # (..., nt, tm)
+    part = jnp.einsum("...nm,nmk->...nk", xg, tiles)
+    y = jnp.zeros(x.shape[:-1] + (pattern.d_out,), dtype=part.dtype)
+    return y.at[..., cg].add(part)
+
+
+def sparse_matmul_pallas(
+    x: jnp.ndarray, tiles: jnp.ndarray, pattern: BlockPattern, interpret=None
+):
+    """TPU hot path: Pallas bsr_spmm over the pattern (x rows = tokens).
+
+    The kernel computes W^T x^T layout-wise: we feed x^T as the dense
+    operand with tile tables transposed so output columns become rows.
+    """
+    from ..kernels import ops as kops
+
+    lead = x.shape[:-1]
+    xt = x.reshape(-1, pattern.d_in).T  # (d_in, T)
+    # kernel contracts tile @ x[tile_col_range] over rows => swap roles
+    order = np.lexsort((np.asarray(pattern.rows), np.asarray(pattern.cols)))
+    row_ids = np.asarray(pattern.cols)[order].astype(np.int32)  # output tiles
+    col_ids = np.asarray(pattern.rows)[order].astype(np.int32)  # input tiles
+    tiles_t = jnp.transpose(tiles[jnp.asarray(order)], (0, 2, 1))  # (nt, tk, tm)
+    # coverage of all output tiles is guaranteed by random_pattern
+    yt = kops.bsr_spmm(
+        tiles_t,
+        jnp.asarray(row_ids),
+        jnp.asarray(col_ids),
+        xt,
+        m_pad=pattern.d_out,
+        interpret=interpret,
+    )
+    return yt.T.reshape(*lead, pattern.d_out)

@@ -1,0 +1,2 @@
+from .step import cross_entropy, make_train_step, make_eval_step
+from .loop import TrainLoop, StepMonitor

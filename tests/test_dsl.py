@@ -1,0 +1,156 @@
+"""The staged DSL: recording, partial evaluation, pattern matching."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.backends import match_block_matmul, run_reference, run_vectorized
+from repro.core.dsl import (
+    ArrayVal,
+    ConcreteArrayVal,
+    Const,
+    Loop,
+    RepRange,
+    StagingError,
+    Store,
+    isDense,
+    loopgen,
+    stage_op,
+)
+from repro.core.ops_dsl import ArrayView, spmm_op, spmv_op
+
+
+def test_loopgen_records_nest():
+    def op(r1: RepRange, a: ArrayVal):
+        def body(i):
+            a[i] = r1.start + i
+
+        return loopgen(r1, body)
+
+    prog = stage_op(op, RepRange(3, 9), ArrayVal("a"))
+    assert len(prog) == 1 and isinstance(prog[0], Loop)
+    assert prog[0].start == 3 and prog[0].stop == 9
+    (store,) = prog[0].body
+    assert isinstance(store, Store) and not store.accumulate
+
+    env = {"a": np.zeros(16)}
+    run_reference(prog, env)
+    np.testing.assert_array_equal(env["a"][3:9], np.arange(3, 9) + 3)
+
+
+def test_accumulate_detection():
+    y, x = ArrayVal("y"), ArrayVal("x")
+
+    def op(r):
+        loopgen(r, lambda i: y.__setitem__(i, y[i] + x[i]))
+
+    prog = stage_op(op, RepRange(0, 4))
+    assert prog[0].body[0].accumulate
+
+
+def test_plain_range_unrolls():
+    """Paper Listing 3: a plain range is fully unrolled at Stage 0."""
+    a = ArrayVal("a")
+
+    def op():
+        loopgen(range(4), lambda i: a.__setitem__(i, i * 10))
+
+    prog = stage_op(op)
+    assert len(prog) == 4  # four independent stores, no Loop
+    assert all(isinstance(s, Store) for s in prog)
+
+
+def test_concrete_array_partial_eval_and_isdense():
+    """isDense on ConcreteArrayVal elides zero work at staging time."""
+    vals = np.array([1.0, 0.0, 3.0, 0.0])
+    cv = ConcreteArrayVal("v", vals)
+    y = ArrayVal("y")
+
+    def op():
+        for i in range(4):  # staging-time loop
+            v = cv[i]
+            if isDense(v):
+                y[i] += v * 2
+
+    prog = stage_op(op)
+    assert len(prog) == 2  # stores for the two non-zeros only
+    env = {"y": np.zeros(4)}
+    run_reference(prog, env)
+    np.testing.assert_array_equal(env["y"], [2, 0, 6, 0])
+
+
+def test_nonaffine_index_rejected():
+    a = ArrayVal("a")
+
+    def op(r):
+        loopgen(r, lambda i: a.__setitem__(i * i, 1.0))
+
+    with pytest.raises(StagingError):
+        stage_op(op, RepRange(0, 4))
+
+
+def test_spmv_op_matches_block_matmul():
+    prog = stage_op(
+        spmv_op,
+        RepRange(640, 690),
+        RepRange(4175, 4235),
+        ArrayView(ArrayVal("val"), 69722),  # Listing 2's constants
+        ArrayVal("x"),
+        ArrayVal("y"),
+    )
+    d = match_block_matmul(prog)
+    assert d is not None
+    assert (d.row_start, d.row_end) == (640, 690)
+    assert (d.col_start, d.col_end) == (4175, 4235)
+    assert d.val_off == 69722
+    assert d.n_cols is None
+
+
+def test_spmm_op_matches_block_matmul():
+    prog = stage_op(
+        spmm_op,
+        RepRange(10, 20),
+        RepRange(30, 45),
+        RepRange(0, 512),
+        ArrayView(ArrayVal("val"), 1000),
+        ArrayVal("x"),
+        ArrayVal("y"),
+    )
+    d = match_block_matmul(prog)
+    assert d is not None
+    assert d.n_cols == 512
+    assert (d.row_start, d.col_start, d.val_off) == (10, 30, 1000)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.integers(1, 6),
+    w=st.integers(1, 6),
+    off=st.integers(0, 50),
+    seed=st.integers(0, 100),
+)
+def test_reference_vs_vectorized_custom_op(h, w, off, seed):
+    """An op OUTSIDE the matmul pattern: both backends must agree."""
+    rng = np.random.default_rng(seed)
+    val = rng.standard_normal(200).astype(np.float32)
+    x = rng.standard_normal(64).astype(np.float32)
+
+    def op(r1, r2, v, xs, ys):
+        def body(i, j):
+            ys[i] += v[(j - r2.start) * len(r1) + (i - r1.start)] + xs[j] * 2.0
+
+        loopgen(r1, lambda i: loopgen(r2, lambda j: body(i, j)))
+
+    prog = stage_op(
+        op, RepRange(2, 2 + h), RepRange(5, 5 + w),
+        ArrayView(ArrayVal("val"), off), ArrayVal("x"), ArrayVal("y"),
+    )
+    assert match_block_matmul(prog) is None  # not a matmul
+    env_ref = {"val": val.copy(), "x": x.copy(), "y": np.zeros(32, np.float32)}
+    run_reference(prog, env_ref)
+    env_vec = {
+        "val": jnp.asarray(val), "x": jnp.asarray(x),
+        "y": jnp.zeros(32, jnp.float32),
+    }
+    env_vec = run_vectorized(prog, env_vec)
+    np.testing.assert_allclose(np.asarray(env_vec["y"]), env_ref["y"], rtol=1e-5)

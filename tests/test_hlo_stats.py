@@ -1,0 +1,118 @@
+"""Unit tests for the HLO text analyzer (roofline measurement tool)."""
+from repro.launch.hlo_stats import (
+    analyze_hlo,
+    collective_stats,
+    parse_shape_bytes,
+    _group_stride,
+    _wire_factor,
+)
+
+HLO = """
+HloModule test, is_scheduled=true
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %g = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %d = f32[8,8]{1,0} dot(%g, %g), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups={{0,1,2,3}}, to_apply=%add
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[8,8]{1,0}) tuple(%i, %ar)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (x: f32[8,8]) -> f32[8,8] {
+  %x = f32[8,8]{1,0} parameter(0)
+  %i0 = s32[] constant(0)
+  %init = (s32[], f32[8,8]{1,0}) tuple(%i0, %x)
+  %w = (s32[], f32[8,8]{1,0}) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  %ag = f32[16,8]{1,0} all-gather(%x), replica_groups=[2,2]<=[2,2]T(1,0), dimensions={0}
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_parse_shape_bytes():
+    assert parse_shape_bytes("f32[8,8]{1,0}") == 256
+    assert parse_shape_bytes("(s32[], bf16[4,2])") == 4 + 16
+    assert parse_shape_bytes("pred[]") == 1
+
+
+def test_while_trip_count_multiplies():
+    r = analyze_hlo(HLO)
+    assert r["flops"] == 5 * 2 * 8 * 8 * 8  # dot in body x trip 5
+
+
+def test_collective_accounting():
+    c = collective_stats(HLO)
+    ar = c["all-reduce"]
+    assert ar["count"] == 5
+    assert ar["bytes"] == 5 * 256
+    assert ar["wire_bytes"] == 5 * 256 * 2 * 3 / 4  # ring AR, n=4
+    ag = c["all-gather"]
+    assert ag["count"] == 1
+    assert ag["bytes"] == 512
+    assert ag["wire_bytes"] == 512 * 0.5  # n=2
+
+
+def test_wire_factors():
+    assert _wire_factor("all-reduce", 4) == 1.5
+    assert _wire_factor("all-gather", 4) == 0.75
+    assert _wire_factor("collective-permute", 2) == 1.0
+    assert _wire_factor("all-reduce", 1) == 0.0
+
+
+def test_group_stride_detects_dcn():
+    # explicit groups crossing pods (stride 256)
+    line = "x = f32[4] all-reduce(%y), replica_groups={{0,256},{1,257}}"
+    assert _group_stride(line) == 256
+    # iota form: [256,2]<=[2,256]T(1,0) => groups pair (i, i+256)
+    line2 = "x = f32[4] all-reduce(%y), replica_groups=[256,2]<=[2,256]T(1,0)"
+    assert _group_stride(line2) == 256
+    # within-pod model axis groups: stride 1
+    line3 = "x = f32[4] all-reduce(%y), replica_groups=[32,16]<=[512]"
+    assert _group_stride(line3) == 1
+
+
+DUS_HLO = """
+HloModule dus, is_scheduled=true
+
+ENTRY %main (buf: f32[64,64], upd: f32[1,64]) -> f32[64,64] {
+  %buf = f32[64,64]{1,0} parameter(0)
+  %upd = f32[1,64]{1,0} parameter(1)
+  %z = s32[] constant(3)
+  ROOT %d = f32[64,64]{1,0} dynamic-update-slice(%buf, %upd, %z, %z)
+}
+"""
+
+
+def test_dus_counts_update_slice_not_buffer():
+    r = analyze_hlo(DUS_HLO)
+    # params read once (64*64*4 + 1*64*4) + DUS write of the UPDATE slice
+    assert r["hbm_bytes_est"] == 64 * 64 * 4 + 64 * 4 + 64 * 4
+
+
+def test_while_plumbing_not_traffic():
+    r = analyze_hlo(HLO)
+    # entry param (256) + body interior ops each trip; the while op's own
+    # tuple output must not be charged
+    assert r["hbm_bytes_est"] < 5 * (256 * 3) + 1024
+
+
+def test_top_collectives_reports_sources():
+    from repro.launch.hlo_stats import top_collectives
+
+    rows = top_collectives(HLO)
+    assert rows and rows[0]["kind"] == "all-reduce"
+    assert rows[0]["trips"] == 5

@@ -1,0 +1,80 @@
+"""SABLE block-sparse NN weights: patterns, matmuls, pruning."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sparse.linear import (
+    pack_dense,
+    prune_dense,
+    random_pattern,
+    sparse_matmul,
+    sparse_matmul_pallas,
+)
+
+
+def _dense_of(pattern, tiles):
+    w = np.zeros((pattern.d_in, pattern.d_out), np.float32)
+    for t, (r, c) in enumerate(zip(pattern.rows, pattern.cols)):
+        w[r * pattern.tm : (r + 1) * pattern.tm,
+          c * pattern.tk : (c + 1) * pattern.tk] = tiles[t]
+    return w
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    ri=st.sampled_from([2, 3, 4]),
+    ci=st.sampled_from([2, 3, 5]),
+    tm=st.sampled_from([4, 8]),
+    tk=st.sampled_from([4, 8]),
+    density=st.floats(0.2, 1.0),
+    seed=st.integers(0, 100),
+)
+def test_sparse_matmul_matches_dense(ri, ci, tm, tk, density, seed):
+    d_in, d_out = ri * tm, ci * tk
+    pat = random_pattern(d_in, d_out, tm, tk, density, seed)
+    rng = np.random.default_rng(seed)
+    tiles = rng.standard_normal((pat.n_tiles, tm, tk)).astype(np.float32)
+    x = rng.standard_normal((3, 5, d_in)).astype(np.float32)
+    y = sparse_matmul(jnp.asarray(x), jnp.asarray(tiles), pat)
+    ref = x @ _dense_of(pat, tiles)
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=2e-4, atol=2e-4)
+
+
+def test_pattern_coverage():
+    pat = random_pattern(64, 128, 8, 16, density=0.2, seed=0)
+    assert set(pat.rows) == set(range(8))  # every input tile-row used
+    assert set(pat.cols) == set(range(8))  # every output tile-col used
+    assert 0.15 <= pat.density <= 0.35
+
+
+def test_prune_dense_keeps_top_blocks():
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((32, 32)).astype(np.float32) * 0.01
+    w[0:8, 0:8] = 10.0  # dominant block must survive pruning
+    pat, tiles = prune_dense(w, 8, 8, density=0.25)
+    assert (0, 0) in set(zip(pat.rows, pat.cols))
+    assert pat.n_tiles == 4
+    y = sparse_matmul(jnp.eye(32), jnp.asarray(tiles), pat)
+    kept = _dense_of(pat, tiles)
+    np.testing.assert_allclose(np.asarray(y), kept, rtol=1e-5)
+
+
+def test_pack_dense_roundtrip():
+    pat = random_pattern(32, 48, 8, 8, 0.5, seed=1)
+    rng = np.random.default_rng(1)
+    tiles = rng.standard_normal((pat.n_tiles, 8, 8)).astype(np.float32)
+    w = _dense_of(pat, tiles)
+    np.testing.assert_allclose(np.asarray(pack_dense(jnp.asarray(w), pat)), tiles)
+
+
+def test_pallas_path_matches_grouped():
+    pat = random_pattern(32, 64, 8, 16, 0.5, seed=2)
+    rng = np.random.default_rng(2)
+    tiles = rng.standard_normal((pat.n_tiles, 8, 16)).astype(np.float32)
+    x = rng.standard_normal((6, 32)).astype(np.float32)
+    y1 = sparse_matmul(jnp.asarray(x), jnp.asarray(tiles), pat)
+    y2 = sparse_matmul_pallas(jnp.asarray(x), jnp.asarray(tiles), pat,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4,
+                               atol=2e-4)

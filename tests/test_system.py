@@ -1,0 +1,87 @@
+"""End-to-end behaviour: the paper's headline claims, in-system.
+
+1. Staged blocked evaluation beats the gather-based (zero-avoiding) CSR
+   strategy on mostly-dense VBR matrices (the paper's core claim,
+   qualitatively, on CPU wall-time with XLA as the 'stock compiler').
+2. Compile-once/run-many: re-staging a same-pattern matrix is ~free.
+3. The full pipeline quickstart: synthesize -> stage -> execute -> verify.
+"""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import vbr as vbrlib
+from repro.core.staging import StagingOptions, clear_cache, stage_spmv
+
+
+def _csr_spmv_baseline(v):
+    """The 'avoid every zero' strategy class (PSC/SpReg's family):
+    gather-based unstructured CSR in JAX."""
+    d = v.to_dense()
+    rows, cols = np.nonzero(d)
+    vals = jnp.asarray(d[rows, cols])
+    rows_j = jnp.asarray(rows)
+    cols_j = jnp.asarray(cols)
+    m = d.shape[0]
+
+    @jax.jit
+    def f(vals, x):
+        return jnp.zeros(m, x.dtype).at[rows_j].add(vals * x[cols_j])
+
+    return f, vals
+
+
+def test_staged_beats_csr_on_mostly_dense():
+    v = vbrlib.synthesize(2000, 2000, 20, 20, 80, block_sparsity=0.2, seed=0)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(2000), jnp.float32)
+    k = stage_spmv(v, StagingOptions(backend="grouped"))
+    val = jnp.asarray(v.val)
+    ref = v.to_dense() @ np.asarray(x)
+    np.testing.assert_allclose(np.asarray(k(val, x)), ref, rtol=2e-3, atol=2e-3)
+
+    csr, cvals = _csr_spmv_baseline(v)
+    np.testing.assert_allclose(np.asarray(csr(cvals, x)), ref, rtol=2e-3,
+                               atol=2e-3)
+
+    def bench(f, *args, n=20):
+        f(*args).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(n):
+            f(*args).block_until_ready()
+        return (time.perf_counter() - t0) / n
+
+    t_staged = bench(k, val, x)
+    t_csr = bench(csr, cvals, x)
+    # SABLE claim: regular blocked loops beat gather-based zero avoidance
+    assert t_staged < t_csr, (t_staged, t_csr)
+
+
+def test_compile_once_run_many():
+    clear_cache()
+    v = vbrlib.synthesize(500, 500, 10, 10, 30, seed=1)
+    t0 = time.perf_counter()
+    k1 = stage_spmv(v, StagingOptions(backend="grouped"))
+    x = jnp.ones(500, jnp.float32)
+    k1(jnp.asarray(v.val), x).block_until_ready()
+    first = time.perf_counter() - t0
+
+    v2 = vbrlib.VBR(**{**v.__dict__})
+    v2.val = v.val * 5.0
+    t0 = time.perf_counter()
+    k2 = stage_spmv(v2, StagingOptions(backend="grouped"))
+    k2(jnp.asarray(v2.val), x).block_until_ready()
+    second = time.perf_counter() - t0
+    assert k1 is k2
+    assert second < first / 2  # no re-staging, no re-compile
+
+
+def test_quickstart_pipeline():
+    v = vbrlib.synthesize(300, 400, 6, 8, 20, block_sparsity=0.3, seed=2)
+    X = np.random.default_rng(2).standard_normal((400, 16)).astype(np.float32)
+    from repro.core.staging import stage_spmm
+
+    k = stage_spmm(v, 16, StagingOptions(backend="grouped"))
+    y = np.asarray(k(jnp.asarray(v.val), jnp.asarray(X)))
+    np.testing.assert_allclose(y, v.to_dense() @ X, rtol=2e-3, atol=2e-3)

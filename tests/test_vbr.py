@@ -1,0 +1,91 @@
+"""VBR format: round trips, indirection arrays, structure hashing."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import vbr as vbrlib
+
+
+def test_paper_fig3_example():
+    """The 11x11 matrix of Fig. 3 with its block partition."""
+    rpntr = [0, 2, 5, 6, 9, 11]
+    cpntr = [0, 2, 5, 6, 9, 11]
+    dense = np.array(
+        [
+            [4, 2, 0, 0, 0, 1, 0, 0, 0, -1, 1],
+            [1, 5, 0, 0, 0, 2, 0, 0, 0, 0, -1],
+            [0, 0, 6, 1, 2, 2, 0, 0, 0, 0, 0],
+            [0, 0, 2, 7, 1, 0, 0, 0, 0, 0, 0],
+            [0, 0, -1, 2, 9, 3, 0, 0, 0, 0, 0],
+            [2, 1, 3, 4, 5, 10, 4, 3, 2, 0, 0],
+            [0, 0, 0, 0, 0, 4, 13, 4, 2, 0, 0],
+            [0, 0, 0, 0, 0, 3, 3, 11, 3, 0, 0],
+            [0, 0, 0, 0, 0, 0, 2, 0, 7, 0, 0],
+            [8, 4, 0, 0, 0, 0, 0, 0, 0, 25, 3],
+            [-2, 3, 0, 0, 0, 0, 0, 0, 0, 8, 12],
+        ],
+        dtype=np.float32,
+    )
+    v = vbrlib.from_dense(dense, rpntr, cpntr)
+    # paper-stated indirection arrays
+    np.testing.assert_array_equal(v.bindx, [0, 2, 4, 1, 2, 0, 1, 2, 3, 2, 3, 0, 4])
+    np.testing.assert_array_equal(v.bpntrb, [0, 3, 5, 9, 11])
+    np.testing.assert_array_equal(v.bpntre, [3, 5, 9, 11, 13])
+    np.testing.assert_array_equal(
+        v.indx, [0, 4, 6, 10, 19, 22, 24, 27, 28, 31, 34, 43, 47, 51]
+    )
+    # val is column-major per block (paper's Val array prefix)
+    np.testing.assert_array_equal(v.val[:10], [4, 1, 2, 5, 1, 2, -1, 0, 1, -1])
+    np.testing.assert_array_equal(v.to_dense(), dense)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(4, 60),
+    cols=st.integers(4, 60),
+    rs=st.integers(1, 8),
+    cs=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+    uniform=st.booleans(),
+    sparsity=st.floats(0.0, 0.9),
+)
+def test_roundtrip_property(rows, cols, rs, cs, seed, uniform, sparsity):
+    nb = max(1, (rs * cs) // 2)
+    v = vbrlib.synthesize(rows, cols, rs, cs, nb, sparsity, uniform, seed)
+    d = v.to_dense()
+    v2 = vbrlib.from_dense(d, v.rpntr, v.cpntr)
+    np.testing.assert_allclose(v2.to_dense(), d)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_structure_hash_ignores_values(seed):
+    v1 = vbrlib.synthesize(40, 40, 4, 4, 8, seed=seed)
+    v2 = vbrlib.VBR(**{**v1.__dict__})
+    v2.val = v1.val * 3.7 + 1.0  # same pattern, new values
+    assert vbrlib.structure_hash(v1) == vbrlib.structure_hash(v2)
+    v3 = vbrlib.synthesize(40, 40, 4, 4, 8, seed=seed + 1)
+    if not np.array_equal(v3.bindx, v1.bindx):
+        assert vbrlib.structure_hash(v3) != vbrlib.structure_hash(v1)
+
+
+def test_block_iterator_covers_stored_values():
+    v = vbrlib.synthesize(50, 70, 5, 7, 12, seed=3)
+    seen = np.zeros(v.stored_nnz, dtype=bool)
+    for t in v.blocks():
+        assert t.size == t.height * t.width
+        seen[t.val_offset : t.val_offset + t.size] = True
+    assert seen.all()
+
+
+def test_empty_block_rows():
+    dense = np.zeros((10, 10), dtype=np.float32)
+    dense[7, 3] = 2.0
+    v = vbrlib.from_dense(dense, [0, 5, 10], [0, 5, 10])
+    assert v.bpntrb[0] == -1  # first block row empty
+    np.testing.assert_array_equal(v.to_dense(), dense)
+
+
+def test_density_metric():
+    v = vbrlib.synthesize(100, 100, 5, 5, 10, block_sparsity=0.5, seed=0)
+    assert 0.3 < v.density() < 0.7
