@@ -1,0 +1,107 @@
+"""Autotuner: cold-vs-warm staging latency and auto-vs-fixed throughput.
+
+Demonstrates the persistent-cache contract (ISSUE 1 acceptance): the first
+(`cold`) autotune of a structure stages and micro-benchmarks every
+candidate; a second process staging the same pattern (`warm` — simulated by
+wiping the in-memory caches but keeping the disk cache) loads the plan and
+performs ZERO candidate benchmarks.  The derived column records the
+benchmark count so the trajectory is checkable from BENCH_results.json.
+
+Throughput rows compare the plan's measured winner against each fixed
+backend on the same matrix.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+import zlib
+
+import numpy as np
+
+from repro.core import vbr as vbrlib
+from repro.core.autotune import (
+    autotune,
+    autotune_stage,
+    autotune_stats,
+    reset_autotune_stats,
+)
+from repro.core.cache import PlanCache
+from repro.core.staging import StagingOptions, clear_cache, stage_spmv
+
+from .common import csv_row, timeit
+
+
+def _matrices(quick: bool):
+    n = 1_000 if quick else 5_000
+    cells = [
+        ("<20,20,60,u>", 20, 20, 60, True),
+        ("<20,20,60,nu>", 20, 20, 60, False),
+        ("<50,50,200,nu>", 50, 50, 200, False),
+    ]
+    out = []
+    for name, rs, cs, nb, uniform in cells:
+        out.append(
+            (
+                name,
+                vbrlib.synthesize(
+                    # crc32, not hash(): str hash is randomized per process,
+                    # and BENCH_*.json rows must be comparable across runs
+                    n, n, rs, cs, nb, 0.2, uniform,
+                    seed=zlib.crc32(name.encode()) % 2**31,
+                ),
+            )
+        )
+    return out
+
+
+def main(quick: bool = True) -> None:
+    iters = 1 if quick else 3
+    with tempfile.TemporaryDirectory() as root:
+        for name, v in _matrices(quick):
+            x = np.random.default_rng(0).standard_normal(v.shape[1]).astype(
+                np.float32
+            )
+
+            # -------- cold: full candidate search -------------------- #
+            clear_cache()
+            reset_autotune_stats()
+            t0 = time.perf_counter()
+            plan = autotune(v, "spmv", cache=PlanCache(root), iters=iters)
+            t_cold = time.perf_counter() - t0
+            n_cold = autotune_stats()["benchmarks"]
+            csv_row(
+                f"autotune/{name}/cold_stage",
+                t_cold * 1e6,
+                f"benchmarks={n_cold};winner={plan.options.backend}",
+            )
+
+            # -------- warm: fresh process, same disk cache ----------- #
+            clear_cache()
+            reset_autotune_stats()
+            t0 = time.perf_counter()
+            kern = autotune_stage(v, "spmv", cache=PlanCache(root))
+            t_warm = time.perf_counter() - t0
+            n_warm = autotune_stats()["benchmarks"]
+            assert n_warm == 0, "warm cache must not micro-benchmark"
+            csv_row(
+                f"autotune/{name}/warm_stage",
+                t_warm * 1e6,
+                f"benchmarks={n_warm};speedup={t_cold / max(t_warm, 1e-9):.1f}x",
+            )
+
+            # -------- throughput: measured winner vs fixed backends -- #
+            t_auto = timeit(kern, v.val, x)
+            csv_row(f"autotune/{name}/spmv_auto", t_auto * 1e6, plan.options.backend)
+            for backend in ("grouped", "bucketed"):
+                k = stage_spmv(v, StagingOptions(backend=backend))
+                t_fix = timeit(k, v.val, x)
+                csv_row(
+                    f"autotune/{name}/spmv_{backend}",
+                    t_fix * 1e6,
+                    f"vs_auto={t_fix / max(t_auto, 1e-9):.2f}x",
+                )
+    clear_cache()
+
+
+if __name__ == "__main__":
+    main()

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import time
+import zlib
 
 import numpy as np
 import jax
@@ -22,8 +23,22 @@ def timeit(fn, *args, warmup: int = 2, iters: int = 10) -> float:
     return float(np.median(ts))
 
 
+# every csv_row is also collected here; benchmarks/run.py dumps the list
+# as BENCH_results.json (see benchmarks/README.md for the schema)
+ROWS: list[dict] = []
+CURRENT_SUITE: str | None = None
+
+
 def csv_row(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+    ROWS.append(
+        {
+            "suite": CURRENT_SUITE,
+            "name": name,
+            "us_per_call": float(us_per_call),
+            "derived": str(derived),
+        }
+    )
 
 
 # ----------------------------------------------------------------------- #
@@ -91,8 +106,10 @@ def paper_matrices(scale: float = 0.2, zeros_pct: int = 20):
     out = []
     for rs, cs, nb, kind in cells:
         v = vbrlib.synthesize(
+            # crc32, not hash(): str hash is randomized per process, and
+            # benchmark rows must be comparable across runs
             n, n, rs, cs, nb, zeros_pct / 100.0, kind == "u",
-            seed=hash((rs, cs, nb, kind)) % 2**31,
+            seed=zlib.crc32(f"{rs},{cs},{nb},{kind}".encode()) % 2**31,
         )
         out.append((f"<{rs},{cs},{nb},{kind}>", v))
     return out

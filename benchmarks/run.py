@@ -1,24 +1,29 @@
 """Benchmark aggregator: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  ``--full`` uses larger (closer to
-paper-scale) matrices; the default 'quick' sizes keep the whole suite a few
-minutes on one CPU core.
+Prints ``name,us_per_call,derived`` CSV and writes the same rows (plus run
+metadata) to ``BENCH_results.json`` — schema in benchmarks/README.md.
+``--full`` uses larger (closer to paper-scale) matrices; the default
+'quick' sizes keep the whole suite a few minutes on one CPU core.
 
   PYTHONPATH=src python -m benchmarks.run [--full] [--only spmv,spmm,...]
+                                          [--json PATH | --no-json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
 from . import (
+    bench_autotune,
     bench_codegen_variants,
     bench_inspection,
     bench_scaling,
     bench_sparsity_sweep,
     bench_spmm,
     bench_spmv,
+    common,
     roofline,
 )
 
@@ -30,6 +35,7 @@ SUITES = {
     "inspection": bench_inspection.main,  # Tables II/IV
     "scaling": bench_scaling.main,  # Figs 6/9
     "roofline": roofline.main,  # §Roofline (from dry-run artifacts)
+    "autotune": bench_autotune.main,  # ISSUE 1: cold/warm plan cache
 }
 
 
@@ -37,18 +43,41 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default="BENCH_results.json")
+    ap.add_argument("--no-json", action="store_true")
     args, _ = ap.parse_known_args()
     only = set(args.only.split(",")) if args.only else set(SUITES)
+    unknown = only - set(SUITES)
+    if unknown:
+        ap.error(
+            f"unknown suite(s) {sorted(unknown)}; known: {sorted(SUITES)}"
+        )
     print("name,us_per_call,derived")
     failed = []
     for name, fn in SUITES.items():
         if name not in only:
             continue
+        common.CURRENT_SUITE = name
         try:
             fn(quick=not args.full)
         except Exception as e:  # keep the suite going; report at the end
             traceback.print_exc()
             failed.append((name, e))
+        finally:
+            common.CURRENT_SUITE = None
+    if not args.no_json and common.ROWS:
+        import jax
+
+        doc = {
+            "version": 1,
+            "jax_backend": jax.default_backend(),
+            "mode": "full" if args.full else "quick",
+            "failed_suites": [name for name, _ in failed],
+            "rows": common.ROWS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"wrote {len(common.ROWS)} rows to {args.json}", file=sys.stderr)
     if failed:
         for name, e in failed:
             print(f"FAILED suite {name}: {e}", file=sys.stderr)

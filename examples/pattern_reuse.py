@@ -38,3 +38,17 @@ rest = (time.perf_counter() - t0) / 20
 print(f"20 same-pattern matrices: {rest*1e3:.1f} ms each "
       f"({first/rest:.0f}x faster than first)")
 print("cache:", cache_info())
+
+# ----------------------------------------------------------------------- #
+# tune-once / run-forever: backend='autotune' measures the candidates once
+# and persists the winning plan on disk keyed by the structure hash, so a
+# SECOND PROCESS staging this pattern skips the search entirely
+# (see docs/architecture.md and benchmarks/bench_autotune.py).
+# ----------------------------------------------------------------------- #
+from repro.core.autotune import autotune_stats  # noqa: E402
+
+t0 = time.perf_counter()
+kern_auto = stage_spmv(base, StagingOptions(backend="autotune"))
+kern_auto(jnp.asarray(base.val), x).block_until_ready()
+print(f"autotuned staging: {(time.perf_counter()-t0)*1e3:.1f} ms, "
+      f"stats={autotune_stats()}")

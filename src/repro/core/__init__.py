@@ -14,3 +14,13 @@ from .staging import (
     stage_spmv,
 )
 from .uniformize import TiledPattern, uniformize
+from .cache import PlanCache, TuningPlan, default_cache, plan_key, set_default_cache
+# NB: the bare `autotune` function is NOT re-exported — it would shadow the
+# `repro.core.autotune` submodule; use `from repro.core.autotune import autotune`.
+from .autotune import (
+    autotune_stage,
+    autotune_stats,
+    candidate_options,
+    reset_autotune_stats,
+    tune_num_workers,
+)

@@ -6,7 +6,7 @@ calls; SABLE does no auto-reordering (paper Section IV-B).
 """
 from __future__ import annotations
 
-from .dsl import ArrayVal, LinExpr, Load, RepRange, loopgen
+from .dsl import ArrayVal, LinExpr, RepRange, loopgen
 
 __all__ = ["ArrayView", "spmv_op", "spmm_op"]
 

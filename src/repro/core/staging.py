@@ -13,7 +13,10 @@ Stage 1  the IR is lowered to a specialized JAX program.  Backends:
                        scalar-prefetched block tables (HLO size O(1)),
            'gather'    generic vectorized evaluation of ANY DSL op
                        (the extensibility story of Section IV-A),
-           'auto'      grouped (CPU/XLA) — pallas on TPU.
+           'auto'      grouped (CPU/XLA) — pallas on TPU,
+           'autotune'  measured choice: micro-benchmark the candidates via
+                       ``core.autotune`` and persist the winner on disk
+                       (``core.cache``) keyed by structure hash + device.
 
 Stage 2  XLA/Mosaic compiles the specialized program.  Executables are
          cached keyed by the *structure hash* — values are runtime inputs,
@@ -54,7 +57,7 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class StagingOptions:
-    backend: str = "auto"  # auto|unrolled|grouped|bucketed|pallas|gather
+    backend: str = "auto"  # auto|autotune|unrolled|grouped|bucketed|pallas|gather
     density_threshold: float = 0.0  # blocks below -> COO tail (needs hints)
     tile: tuple = (8, 128)  # pallas (tm, tk)
     spmm_bn: int = 128  # pallas N-tile
@@ -457,6 +460,10 @@ def stage_spmv(
     opts: StagingOptions = StagingOptions(),
     value_hints: Optional[np.ndarray] = None,
 ) -> StagedKernel:
+    if opts.backend == "autotune":
+        from .autotune import autotune_stage
+
+        return autotune_stage(vbr, "spmv", value_hints=value_hints, base_opts=opts)
     hints = vbr.val if (opts.density_threshold > 0 and value_hints is None) else value_hints
     return _cached("spmv", vbr, opts, hints)
 
@@ -467,6 +474,12 @@ def stage_spmm(
     opts: StagingOptions = StagingOptions(),
     value_hints: Optional[np.ndarray] = None,
 ) -> StagedKernel:
+    if opts.backend == "autotune":
+        from .autotune import autotune_stage
+
+        return autotune_stage(
+            vbr, "spmm", n_cols, value_hints=value_hints, base_opts=opts
+        )
     hints = vbr.val if (opts.density_threshold > 0 and value_hints is None) else value_hints
     return _cached("spmm", vbr, opts, hints, n_cols=n_cols)
 

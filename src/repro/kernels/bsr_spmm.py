@@ -79,7 +79,11 @@ def bsr_spmm_pallas(
             in_specs=in_specs,
             out_specs=out_spec,
         )
-        compiler_params = pltpu.CompilerParams(
+        # jax renamed TPUCompilerParams -> CompilerParams across releases
+        _CompilerParams = getattr(
+            pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+        )
+        compiler_params = _CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         )
         return pl.pallas_call(

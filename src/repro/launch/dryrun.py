@@ -36,7 +36,7 @@ from ..distributed.sharding import (  # noqa: E402
     param_specs,
 )
 from ..models.config import ModelConfig, param_count  # noqa: E402
-from ..models.transformer import decode_step, encode, forward_train, prefill  # noqa: E402
+from ..models.transformer import decode_step, encode, prefill  # noqa: E402
 from ..optim.adamw import AdamWConfig  # noqa: E402
 from ..train.step import make_train_step  # noqa: E402
 from . import hlo_stats  # noqa: E402

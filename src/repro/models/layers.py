@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..distributed.ctx import MODEL, fetch
-from ..sparse.linear import BlockPattern, random_pattern, sparse_matmul
+from ..sparse.linear import random_pattern, sparse_matmul_auto
 from .config import ModelConfig
 
 __all__ = [
@@ -102,13 +102,13 @@ def ffn_apply(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
     if cfg.sable is not None and p["w1"].ndim == 3:
         pats = sable_patterns(cfg)
         p_in, p_out = pats["in"], pats["out"]
-        h = sparse_matmul(x, fetch(p["w1"].astype(x.dtype), MODEL), p_in)
+        h = sparse_matmul_auto(x, fetch(p["w1"].astype(x.dtype), MODEL), p_in)
         if cfg.ffn_type == "swiglu":
-            g = sparse_matmul(x, fetch(p["w3"].astype(x.dtype), MODEL), p_in)
+            g = sparse_matmul_auto(x, fetch(p["w3"].astype(x.dtype), MODEL), p_in)
             h = jax.nn.silu(h) * g
         else:
             h = _act(cfg, h)
-        return sparse_matmul(h, fetch(p["w2"].astype(x.dtype), MODEL), p_out)
+        return sparse_matmul_auto(h, fetch(p["w2"].astype(x.dtype), MODEL), p_out)
     h = x @ fetch(p["w1"].astype(x.dtype), None, MODEL)
     if cfg.ffn_type == "swiglu":
         h = jax.nn.silu(h) * (x @ fetch(p["w3"].astype(x.dtype), None, MODEL))

@@ -9,7 +9,6 @@ Cache layout: {"conv": (B, d_conv-1, ch), "ssm": (B, H, N, P)}.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

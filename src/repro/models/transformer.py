@@ -15,7 +15,6 @@ as xs/ys.  Remat policy from cfg.remat wraps each block body.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -19,12 +19,50 @@ from ..models.config import ModelConfig
 from ..models.transformer import decode_step, encode, init_cache, prefill
 
 
+def _has_sparse_ffn(params, patterns) -> bool:
+    """True iff the FFN weights are actually tiled for one of the sable
+    ``patterns`` — i.e. some w1/w2/w3 leaf ends in (n_tiles, tm, tk).
+    Layer stacking may prepend a scan dim, so only trailing dims are
+    matched.  Dense-param engines thus skip the sparse-plan warmup even
+    when cfg.sable is set."""
+    want = {(p.n_tiles, p.tm, p.tk) for p in patterns.values()}
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    for path, leaf in flat:
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        if (
+            keys
+            and keys[-1] in ("w1", "w2", "w3")
+            and tuple(getattr(leaf, "shape", ())[-3:]) in want
+        ):
+            return True
+    return False
+
+
 class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params, max_len: int, enc_len: int = 0):
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        max_len: int,
+        enc_len: int = 0,
+        autotune_sparse: bool = True,
+    ):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.enc_len = enc_len
+        self.sparse_plans = {}
+        if autotune_sparse and getattr(cfg, "sable", None) is not None:
+            # Resolve sparse-matmul strategies BEFORE jit traces the model:
+            # choose_matmul_strategy inside a trace can only fall back to the
+            # device heuristic, while here it loads (or measures and
+            # persists) the per-pattern plan from the shared plan cache.
+            from ..models.layers import sable_patterns
+            from ..sparse.linear import warm_matmul_plans
+
+            pats = sable_patterns(cfg)
+            if _has_sparse_ffn(params, pats):
+                self.sparse_plans = warm_matmul_plans(pats.values())
 
         @jax.jit
         def _prefill(params, tokens, cache, enc_out):

@@ -1,2 +1,13 @@
 """NN integration of SABLE block-sparse weights."""
-from .linear import BlockPattern, pack_dense, random_pattern, sparse_matmul, prune_dense
+from .linear import (
+    BlockPattern,
+    choose_matmul_strategy,
+    pack_dense,
+    pattern_hash,
+    prune_dense,
+    random_pattern,
+    sparse_matmul,
+    sparse_matmul_auto,
+    sparse_matmul_pallas,
+    warm_matmul_plans,
+)

@@ -14,6 +14,7 @@ Compute strategies mirror ``core.staging`` backends:
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -24,8 +25,12 @@ __all__ = [
     "random_pattern",
     "pack_dense",
     "prune_dense",
+    "pattern_hash",
     "sparse_matmul",
     "sparse_matmul_pallas",
+    "sparse_matmul_auto",
+    "choose_matmul_strategy",
+    "warm_matmul_plans",
 ]
 
 
@@ -156,3 +161,160 @@ def sparse_matmul_pallas(
         interpret=interpret,
     )
     return yt.T.reshape(*lead, pattern.d_out)
+
+
+# ---------------------------------------------------------------------- #
+# AD-safe Pallas dispatch: pallas_call has no transpose rule, so training
+# through the kernel would raise.  Forward runs the kernel; backward is the
+# (differentiable) gather/einsum formulation of the same contraction.
+# ---------------------------------------------------------------------- #
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _pallas_matmul_ad(pattern: BlockPattern, x, tiles):
+    return sparse_matmul_pallas(x, tiles, pattern)
+
+
+def _pallas_matmul_fwd(pattern, x, tiles):
+    return sparse_matmul_pallas(x, tiles, pattern), (x, tiles)
+
+
+def _pallas_matmul_bwd(pattern, res, g):
+    x, tiles = res
+    rg = jnp.asarray(pattern.row_gather())  # (nt, tm)
+    cg = jnp.asarray(pattern.col_gather())  # (nt, tk)
+    gg = g[..., cg]  # (..., nt, tk)
+    dx = (
+        jnp.zeros_like(x)
+        .at[..., rg]
+        .add(jnp.einsum("...nk,nmk->...nm", gg, tiles))
+    )
+    dtiles = jnp.einsum("...nm,...nk->nmk", x[..., rg], gg)
+    return dx, dtiles.astype(tiles.dtype)
+
+
+_pallas_matmul_ad.defvjp(_pallas_matmul_fwd, _pallas_matmul_bwd)
+
+
+# ---------------------------------------------------------------------- #
+# Plan-driven strategy selection (shares core.cache with the autotuner)
+# ---------------------------------------------------------------------- #
+_MATMUL_IMPLS = {
+    "grouped": sparse_matmul,
+    "pallas": lambda x, tiles, pattern: _pallas_matmul_ad(pattern, x, tiles),
+}
+# pattern hash -> strategy name, resolved once per process (trace-safe)
+_STRATEGY_REGISTRY: dict[str, str] = {}
+
+
+def pattern_hash(pattern: BlockPattern) -> str:
+    """Structure hash of a BlockPattern (tile coords are the structure)."""
+    import hashlib
+
+    h = hashlib.sha256()
+    h.update(
+        repr(
+            (pattern.d_in, pattern.d_out, pattern.tm, pattern.tk,
+             pattern.rows, pattern.cols)
+        ).encode()
+    )
+    return h.hexdigest()[:16]
+
+
+def choose_matmul_strategy(
+    pattern: BlockPattern,
+    batch: int = 8,
+    cache=None,
+    allow_bench: bool = True,
+    warmup: int = 1,
+    iters: int = 3,
+) -> str:
+    """Measured (or cached) choice between the grouped-einsum and Pallas
+    sparse-matmul strategies for one pattern — the ``sparse.linear``
+    counterpart of ``core.autotune``, persisted through the same plan cache
+    keyed by ``pattern_hash``.
+
+    On CPU the Pallas kernel only runs in interpret mode and can never win,
+    so the candidate set collapses to ``grouped`` and no benchmark runs.
+    """
+    from ..core import cache as cachelib
+    from ..core.staging import StagingOptions
+
+    phash = pattern_hash(pattern)
+    found = _STRATEGY_REGISTRY.get(phash)
+    if found is not None:
+        return found
+    device = jax.default_backend()
+    key = cachelib.plan_key("linear", phash, device)
+    store = cache if cache is not None else cachelib.default_cache()
+    plan = store.load_plan(key)
+    if plan is not None:
+        _STRATEGY_REGISTRY[phash] = plan.options.backend
+        return plan.options.backend
+
+    candidates = ["grouped"] + (["pallas"] if device == "tpu" else [])
+    timings: dict[str, float] = {}
+    if len(candidates) > 1 and allow_bench:
+        from ..core.autotune import measure
+
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(
+            rng.standard_normal((batch, pattern.d_in)).astype(np.float32)
+        )
+        tiles = jnp.asarray(
+            rng.standard_normal(
+                (pattern.n_tiles, pattern.tm, pattern.tk)
+            ).astype(np.float32)
+        )
+        for name in candidates:
+            fn = jax.jit(lambda x, t, _f=_MATMUL_IMPLS[name]: _f(x, t, pattern))
+            try:
+                timings[name] = measure(fn, x, tiles, warmup=warmup, iters=iters)
+            except Exception:
+                continue
+        best = min(timings, key=timings.get) if timings else "grouped"
+        source = "measured" if timings else "heuristic"
+    else:
+        best = candidates[-1] if not allow_bench else candidates[0]
+        source = "heuristic"
+
+    plan = cachelib.TuningPlan(
+        kind="linear",
+        structure_hash=phash,
+        options=StagingOptions(backend=best, tile=(pattern.tm, pattern.tk)),
+        device=device,
+        timings=timings,
+        meta={
+            "d_in": pattern.d_in,
+            "d_out": pattern.d_out,
+            "tm": pattern.tm,
+            "tk": pattern.tk,
+            "n_tiles": pattern.n_tiles,
+            "density": pattern.density,
+        },
+        source=source,
+    )
+    # a mid-trace heuristic fallback is provisional: keep it out of the
+    # persistent cache so a later warm_matmul_plans() can still measure
+    if source == "measured" or len(candidates) == 1:
+        store.store_plan(key, plan)
+        _STRATEGY_REGISTRY[phash] = best
+    return best
+
+
+def warm_matmul_plans(patterns, batch: int = 8, cache=None) -> dict:
+    """Resolve strategies for many patterns ahead of tracing (server
+    startup hook — e.g. ``ServeEngine``).  Returns {hash: strategy}."""
+    out = {}
+    for p in patterns:
+        out[pattern_hash(p)] = choose_matmul_strategy(p, batch=batch, cache=cache)
+    return out
+
+
+def sparse_matmul_auto(x: jnp.ndarray, tiles: jnp.ndarray, pattern: BlockPattern):
+    """Plan-dispatched sparse matmul.  Inside a jit trace an unresolved
+    pattern falls back to the device heuristic WITHOUT benchmarking (a
+    micro-benchmark mid-trace would compile-thrash); call
+    ``warm_matmul_plans`` first to get measured choices under jit.
+    """
+    tracing = isinstance(x, jax.core.Tracer)
+    strategy = choose_matmul_strategy(pattern, allow_bench=not tracing)
+    return _MATMUL_IMPLS[strategy](x, tiles, pattern)

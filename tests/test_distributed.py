@@ -1,13 +1,11 @@
 """Distribution: sharding specs, multi-device pjit (subprocess), elastic
 restore across mesh shapes, HLO analyzer."""
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
 import numpy as np
-import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 

@@ -2,7 +2,10 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # keep deterministic cases running without hypothesis
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.backends import match_block_matmul, run_reference, run_vectorized
 from repro.core.dsl import (

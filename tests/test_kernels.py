@@ -3,10 +3,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # keep deterministic cases running without hypothesis
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import vbr as vbrlib
-from repro.core.backends import BlockMatmul
 from repro.core.uniformize import uniformize
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref

@@ -1,8 +1,10 @@
 """SABLE block-sparse NN weights: patterns, matmuls, pruning."""
 import numpy as np
 import jax.numpy as jnp
-import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # keep deterministic cases running without hypothesis
+    from _hypothesis_stub import given, settings, st
 
 from repro.sparse.linear import (
     pack_dense,

@@ -3,7 +3,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # keep deterministic cases running without hypothesis
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import vbr as vbrlib
 from repro.core.staging import (
@@ -15,7 +18,7 @@ from repro.core.staging import (
     stage_spmm,
     stage_spmv,
 )
-from repro.core.dsl import RepRange, loopgen
+from repro.core.dsl import loopgen
 
 BACKENDS = ["unrolled", "grouped", "gather", "pallas"]
 

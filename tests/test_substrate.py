@@ -1,6 +1,5 @@
 """Optimizer, schedule, data pipeline, checkpointing, train loop."""
 import os
-import time
 
 import numpy as np
 import jax
@@ -9,7 +8,7 @@ import pytest
 
 from repro.checkpoint.manager import CheckpointManager, save_checkpoint, restore_checkpoint
 from repro.data.pipeline import FileDataset, Prefetcher, SyntheticDataset
-from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 from repro.optim.schedule import cosine_schedule
 from repro.train.loop import StepMonitor, TrainLoop
 

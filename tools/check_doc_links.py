@@ -1,0 +1,53 @@
+#!/usr/bin/env python
+"""Docs-link check: every relative markdown link must resolve to a file.
+
+Scans tracked ``*.md`` files for ``[text](target)`` links, ignores absolute
+URLs and pure anchors, and fails if a relative target (path resolved
+against the containing file) does not exist.  Run from the repo root:
+
+    python tools/check_doc_links.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_DIRS = {".git", ".github", "__pycache__", ".ruff_cache", ".pytest_cache"}
+# files quoting external repos verbatim — their relative links point elsewhere
+SKIP_FILES = {"SNIPPETS.md", "PAPERS.md"}
+
+
+def iter_markdown(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for name in filenames:
+            if name.endswith(".md") and name not in SKIP_FILES:
+                yield os.path.join(dirpath, name)
+
+
+def main() -> int:
+    root = os.getcwd()
+    bad = []
+    for path in iter_markdown(root):
+        text = open(path, encoding="utf-8").read()
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = os.path.normpath(os.path.join(os.path.dirname(path), rel))
+            if not os.path.exists(resolved):
+                bad.append((os.path.relpath(path, root), target))
+    if bad:
+        for src, target in bad:
+            print(f"BROKEN LINK: {src} -> {target}")
+        return 1
+    print("all markdown links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
