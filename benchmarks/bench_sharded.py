@@ -1,0 +1,97 @@
+"""Sharded staged SpMV/SpMM scaling over 1/2/4/8 forced host devices.
+
+The paper's parallel results (up to ~7x on 8 threads) split staged block
+work across workers; the sharded staging subsystem does the same split
+across a JAX device mesh.  A normal CPU process sees ONE device, so the
+measurement runs in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` and stages the same
+structure over 1/2/4/8-device meshes.  Forced host devices share the
+physical cores, so on a 1-core container wall-clock SPEEDUP is not
+expected — the row's ``derived`` field carries the partition balance
+(``imbalance``, the quantity that bounds real-hardware scaling) next to
+the measured time.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from .common import csv_row
+
+_CHILD = """
+import json, numpy as np, jax, jax.numpy as jnp
+from repro.core import vbr as vbrlib
+from repro.core.staging import stage_spmv, stage_spmm
+from repro.launch.mesh import make_staging_mesh
+from benchmarks.common import timeit
+
+quick = {quick}
+n = 600 if quick else 2000
+iters = 3 if quick else 8
+rows = []
+for rs, cs, nb in ([(24, 24, 90)] if quick else [(30, 30, 120), (80, 80, 900)]):
+    v = vbrlib.synthesize(n, n, rs, cs, nb, 0.2, False, seed=nb)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    X = jnp.asarray(rng.standard_normal((n, 16)).astype(np.float32))
+    val = jnp.asarray(v.val)
+    for shards in (1, 2, 4, 8):
+        mesh = make_staging_mesh(shards)
+        kv = stage_spmv(v, mesh=mesh)
+        tv = timeit(kv, val, x, warmup=2, iters=iters)
+        km = stage_spmm(v, 16, mesh=mesh)
+        tm = timeit(km, val, X, warmup=2, iters=iters)
+        rows.append({{
+            "matrix": f"Matrix_{{rs}}_{{cs}}_{{nb}}",
+            "shards": shards,
+            "spmv_s": tv,
+            "spmm_s": tm,
+            "imbalance": kv.imbalance(),
+        }})
+print("RESULT " + json.dumps(rows))
+"""
+
+
+def main(quick: bool = False) -> None:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in ["src", env.get("PYTHONPATH", ""), "."] if p
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", _CHILD.format(quick=quick)],
+        capture_output=True, text=True, env=env, timeout=1800,
+    )
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"sharded bench subprocess failed:\n{out.stdout}\n{out.stderr}"
+        )
+    rows = []
+    for line in out.stdout.splitlines():
+        if line.startswith("RESULT "):
+            rows = json.loads(line[len("RESULT "):])
+    base = {}
+    for r in rows:
+        key = r["matrix"]
+        if r["shards"] == 1:
+            base[key] = (r["spmv_s"], r["spmm_s"])
+        b = base.get(key, (r["spmv_s"], r["spmm_s"]))
+        csv_row(
+            f"sharded/{key}/spmv/d{r['shards']}",
+            r["spmv_s"] * 1e6,
+            f"speedup={b[0] / max(r['spmv_s'], 1e-12):.2f},"
+            f"imbalance={r['imbalance']:.3f}",
+        )
+        csv_row(
+            f"sharded/{key}/spmm/d{r['shards']}",
+            r["spmm_s"] * 1e6,
+            f"speedup={b[1] / max(r['spmm_s'], 1e-12):.2f},"
+            f"imbalance={r['imbalance']:.3f}",
+        )
+
+
+if __name__ == "__main__":
+    main(quick=True)

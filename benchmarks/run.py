@@ -5,8 +5,12 @@ metadata) to ``BENCH_results.json`` — schema in benchmarks/README.md.
 ``--full`` uses larger (closer to paper-scale) matrices; the default
 'quick' sizes keep the whole suite a few minutes on one CPU core.
 
-  PYTHONPATH=src python -m benchmarks.run [--full] [--only spmv,spmm,...]
+  PYTHONPATH=src python -m benchmarks.run [--full | --smoke]
+                                          [--only spmv,spmm,...]
                                           [--json PATH | --no-json]
+
+``--smoke`` is the CI mode: quick sizes, a small representative suite
+subset (one kernel suite + the sharded scaling sweep), same JSON schema.
 """
 from __future__ import annotations
 
@@ -20,6 +24,7 @@ from . import (
     bench_codegen_variants,
     bench_inspection,
     bench_scaling,
+    bench_sharded,
     bench_sparsity_sweep,
     bench_spmm,
     bench_spmv,
@@ -36,17 +41,25 @@ SUITES = {
     "scaling": bench_scaling.main,  # Figs 6/9
     "roofline": roofline.main,  # §Roofline (from dry-run artifacts)
     "autotune": bench_autotune.main,  # ISSUE 1: cold/warm plan cache
+    "sharded": bench_sharded.main,  # ISSUE 3: 1/2/4/8-device shard_map
 }
+
+SMOKE_SUITES = ("spmv", "sharded")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: quick sizes, representative suite subset")
     ap.add_argument("--only", default=None)
     ap.add_argument("--json", default="BENCH_results.json")
     ap.add_argument("--no-json", action="store_true")
     args, _ = ap.parse_known_args()
-    only = set(args.only.split(",")) if args.only else set(SUITES)
+    if args.smoke and args.full:
+        ap.error("--smoke and --full are mutually exclusive")
+    default = set(SMOKE_SUITES) if args.smoke else set(SUITES)
+    only = set(args.only.split(",")) if args.only else default
     unknown = only - set(SUITES)
     if unknown:
         ap.error(

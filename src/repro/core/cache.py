@@ -137,12 +137,29 @@ def options_from_dict(d: dict) -> StagingOptions:
     )
 
 
-def plan_key(kind: str, structure_hash: str, device: str, n_cols=None) -> str:
+def plan_key(
+    kind: str,
+    structure_hash: str,
+    device: str,
+    n_cols=None,
+    shard_id=None,
+    num_shards=None,
+) -> str:
     """Filename-safe cache key.  Plans are per-device: the measured-best
-    backend on a TPU (pallas) is not the best on CPU (grouped)."""
+    backend on a TPU (pallas) is not the best on CPU (grouped).
+
+    Sharded staging keys per-shard plans by the PARENT structure hash plus
+    ``(shard_id, num_shards)`` — ``...-s3of8`` — so a shard's tuned plan is
+    found from the parent pattern without re-deriving the sub-structure
+    hash.  ``num_shards`` alone (``...-x8``) keys whole-partition records.
+    """
     parts = [kind, structure_hash, device]
     if n_cols is not None:
         parts.append(f"n{int(n_cols)}")
+    if shard_id is not None:
+        parts.append(f"s{int(shard_id)}of{int(num_shards or 0)}")
+    elif num_shards is not None:
+        parts.append(f"x{int(num_shards)}")
     return "-".join(parts)
 
 

@@ -459,7 +459,28 @@ def stage_spmv(
     vbr: vbrlib.VBR,
     opts: StagingOptions = StagingOptions(),
     value_hints: Optional[np.ndarray] = None,
-) -> StagedKernel:
+    *,
+    mesh=None,
+    shards: Optional[int] = None,
+    shard_axis: str = "shards",
+    shard_strategy: str = "lpt",
+):
+    """Stage a pattern-specialized SpMV kernel.
+
+    With ``mesh=`` (a 1-D device mesh, see ``launch.mesh.make_staging_mesh``)
+    or ``shards=N``, the block rows are partitioned into nnz-balanced
+    shards, each shard is staged for its own block-size distribution, and
+    execution runs under ``shard_map`` across the mesh (``shards=`` alone:
+    a host-loop reference of the same split).  Returns a
+    :class:`~repro.core.sharded.ShardedStagedKernel` in that case.
+    """
+    if mesh is not None or shards is not None:
+        from .sharded import ShardedStagedKernel
+
+        return ShardedStagedKernel(
+            "spmv", vbr, opts, num_shards=shards, mesh=mesh,
+            shard_axis=shard_axis, strategy=shard_strategy, hints=value_hints,
+        )
     if opts.backend == "autotune":
         from .autotune import autotune_stage
 
@@ -473,7 +494,22 @@ def stage_spmm(
     n_cols: int,
     opts: StagingOptions = StagingOptions(),
     value_hints: Optional[np.ndarray] = None,
-) -> StagedKernel:
+    *,
+    mesh=None,
+    shards: Optional[int] = None,
+    shard_axis: str = "shards",
+    shard_strategy: str = "lpt",
+):
+    """Stage a pattern-specialized SpMM kernel; ``mesh=``/``shards=`` as in
+    :func:`stage_spmv`."""
+    if mesh is not None or shards is not None:
+        from .sharded import ShardedStagedKernel
+
+        return ShardedStagedKernel(
+            "spmm", vbr, opts, num_shards=shards, mesh=mesh,
+            shard_axis=shard_axis, strategy=shard_strategy, hints=value_hints,
+            n_cols=n_cols,
+        )
     if opts.backend == "autotune":
         from .autotune import autotune_stage
 

@@ -1,3 +1,13 @@
+from .partition import (
+    ShardPlan,
+    VBRShard,
+    block_row_nnz,
+    load_shard_plan,
+    make_shard_plan,
+    partition_nnz_balanced,
+    save_shard_plan,
+    shard_vbr,
+)
 from .sharding import (
     ParallelConfig,
     batch_specs,
@@ -5,4 +15,5 @@ from .sharding import (
     make_shardings,
     param_specs,
     opt_state_specs,
+    slice_shardings,
 )

@@ -14,7 +14,8 @@ import threading
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-__all__ = ["activation_sharding", "constrain", "DP", "MODEL", "NONE"]
+__all__ = ["activation_sharding", "constrain", "anchor_params", "DP",
+           "MODEL", "NONE"]
 
 DP = "__DP__"
 MODEL = "__M__"
@@ -22,19 +23,61 @@ NONE = None
 
 _TLS = threading.local()
 
+# jax's trace cache is shared across jit instances: a function traced once
+# OUTSIDE an activation_sharding context (constraints no-op'd) is NOT
+# retraced when jitted again inside one — the constraint-free jaxpr is
+# reused, every placeholder resolution is lost, and the SPMD partitioner
+# is left with in_shardings only (which miscompiles outright on some mesh
+# factorizations, e.g. (2,4,1)/(2,2,2) over 8 host devices).  Both edges
+# therefore invalidate: entering clears traces recorded outside (or under
+# a different mesh/config), and exiting clears traces that baked the
+# context's concrete NamedShardings in, restoring the no-op-outside
+# contract.  Net cost: two global jax.clear_caches() per context block —
+# every jit in the process retraces/recompiles afterwards, so hold the
+# context around a whole launch phase, not per step.  NESTED re-entries
+# of an equal (mesh, pc) are free (fingerprint match).  Caveat: the
+# fingerprint is process-global while the ctx is thread-local — tracing
+# the same function concurrently from threads inside AND outside a
+# context can still cross-contaminate; keep tracing single-threaded
+# around context changes.
+_LAST_TRACE_KEY = [None]
+
+
+def _ctx_fingerprint(ctx) -> object:
+    if ctx is None:
+        return None
+    mesh, dp, model, pc = ctx
+    # Mesh compares by devices+axis_names: nested re-entry of an equal
+    # context is a fingerprint match and skips the clear
+    return (mesh, dp, model, pc)
+
+
+def _invalidate_traces(key) -> None:
+    if _LAST_TRACE_KEY[0] != key:
+        jax.clear_caches()
+        _LAST_TRACE_KEY[0] = key
+
 
 @contextlib.contextmanager
-def activation_sharding(mesh, pc):
+def activation_sharding(mesh, pc, invalidate: bool = True):
+    """``invalidate=False`` skips the trace-cache invalidation: safe ONLY
+    when the context is entered inside the traced function itself (e.g.
+    ``make_train_step(mesh=...)``), where the constraints are part of
+    every trace and the cache can never serve a constraint-free jaxpr."""
     from .sharding import dp_axes
 
     prev = getattr(_TLS, "ctx", None)
     dp = dp_axes(mesh, pc)
     model = pc.tensor_axis if pc.tensor_axis in mesh.axis_names else None
-    _TLS.ctx = (mesh, dp if dp else None, model)
+    _TLS.ctx = (mesh, dp if dp else None, model, pc)
+    if invalidate:
+        _invalidate_traces(_ctx_fingerprint(_TLS.ctx))
     try:
         yield
     finally:
         _TLS.ctx = prev
+        if invalidate:
+            _invalidate_traces(_ctx_fingerprint(prev))
 
 
 def constrain(x, *parts):
@@ -43,7 +86,7 @@ def constrain(x, *parts):
     ctx = getattr(_TLS, "ctx", None)
     if ctx is None:
         return x
-    mesh, dp, model = ctx
+    mesh, dp, model = ctx[:3]
     resolved = []
     for p in parts:
         if p == DP:
@@ -55,6 +98,32 @@ def constrain(x, *parts):
     resolved += [None] * (x.ndim - len(resolved))
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(mesh, P(*resolved[: x.ndim]))
+    )
+
+
+def anchor_params(tree):
+    """Pin a scanned per-layer params slice to its storage sharding.
+
+    Inside ``lax.scan`` each layer's weights arrive as a ``dynamic-slice``
+    of the fsdp-sharded stack; without an explicit constraint between that
+    slice and the TP-layout use sites (``fetch``), XLA's SPMD partitioner
+    falls into its "involuntary full rematerialization" path — slow, and
+    on some mesh factorizations ((2,4,1), (2,2,2) over 8 host devices)
+    numerically WRONG.  Anchoring every slice leaf to the layout it is
+    already stored in costs nothing and removes the ambiguity.  No-op
+    outside an activation_sharding context or when
+    ``ParallelConfig.anchor_scan_params`` is off.
+    """
+    ctx = getattr(_TLS, "ctx", None)
+    if ctx is None:
+        return tree
+    mesh, pc = ctx[0], ctx[3]
+    if not pc.anchor_scan_params:
+        return tree
+    from .sharding import slice_shardings
+
+    return jax.tree.map(
+        jax.lax.with_sharding_constraint, tree, slice_shardings(mesh, pc, tree)
     )
 
 

@@ -28,6 +28,7 @@ __all__ = [
     "batch_specs",
     "cache_specs",
     "make_shardings",
+    "slice_shardings",
     "path_of",
 ]
 
@@ -40,6 +41,9 @@ class ParallelConfig:
     dp_axes: tuple = ("pod", "data")
     compress_grads: bool = True  # bf16 gradient collectives
     seq_shard_cache: bool = True  # context-parallel KV when heads don't divide
+    anchor_scan_params: bool = True  # constrain scanned per-layer weight
+    # slices to their storage layout (stops XLA's involuntary full
+    # rematerialization, which miscompiles on some mesh factorizations)
 
 
 def _present(mesh: Mesh, axes) -> tuple:
@@ -195,6 +199,28 @@ def cache_specs(cfg, cache, pc: ParallelConfig = ParallelConfig(), model_size: i
         return P(*([None] * nd))
 
     return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def slice_shardings(mesh: Mesh, pc: ParallelConfig, tree) -> object:
+    """NamedShardings for ONE scanned layer slice of a stacked params
+    subtree (paths like ``sub0/mixer/wq``, no leading scan dim).
+
+    This is the storage layout of the per-iteration ``dynamic-slice``
+    inside ``lax.scan`` — the same rule table as :func:`param_specs` with
+    ``stacked=False``, resolved and shape-sanitized like
+    :func:`make_shardings`.  Constraining the slice to it gives the SPMD
+    partitioner an explicit anchor between the slice and the (differently
+    laid out) use sites, preventing the "involuntary full
+    rematerialization" path that both round-trips the weights through a
+    replicated layout and, on some mesh factorizations (e.g. ``(2, 4, 1)``
+    or ``(2, 2, 2)`` over 8 hosts), miscompiles outright.
+    """
+
+    def one(kp, leaf):
+        return _spec_for(path_of(kp), leaf.ndim, False, "__F__", "__M__", "__FM__")
+
+    specs = jax.tree_util.tree_map_with_path(one, tree)
+    return make_shardings(mesh, pc, specs, tree)
 
 
 def _axes_size(mesh: Mesh, entry) -> int:

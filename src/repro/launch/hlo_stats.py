@@ -202,11 +202,14 @@ _OPERANDS_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
 
 
 def _operand_names(op: _Op) -> list:
-    """Operand names of the op (compiled HLO prints names only)."""
+    """Operand names of the op.  Depending on the XLA version, compiled HLO
+    prints operands either as bare names (``dot(%a, %b)``) or with full
+    shapes (``dot(f32[64,128]{1,0} %a, ...)``) — shape dims and layouts
+    contain commas, so splitting must track ``[]``/``{}`` nesting too."""
     after = op.line.split(op.opcode + "(", 1)
     if len(after) < 2:
         return []
-    depth, out, cur = 1, [], []
+    depth, nest, out, cur = 1, 0, [], []
     for ch in after[1]:
         if ch == "(":
             depth += 1
@@ -214,7 +217,11 @@ def _operand_names(op: _Op) -> list:
             depth -= 1
             if depth == 0:
                 break
-        if ch == "," and depth == 1:
+        elif ch in "[{":
+            nest += 1
+        elif ch in "]}":
+            nest -= 1
+        if ch == "," and depth == 1 and nest == 0:
             out.append("".join(cur).strip())
             cur = []
         else:

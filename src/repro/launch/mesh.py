@@ -14,7 +14,7 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-__all__ = ["make_production_mesh", "make_local_mesh", "HW"]
+__all__ = ["make_production_mesh", "make_local_mesh", "make_staging_mesh", "HW"]
 
 
 # TPU v5e hardware constants used by the roofline analysis
@@ -31,6 +31,22 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_staging_mesh(num_shards: int | None = None, axis: str = "shards"):
+    """1-D mesh for sharded staged execution (``stage_spmv(..., mesh=)``).
+
+    Uses the first ``num_shards`` devices (all of them by default).  On CPU,
+    force multiple host devices first:
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    """
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    n = num_shards if num_shards is not None else len(devs)
+    if n > len(devs):
+        raise ValueError(f"asked for {n} shards but only {len(devs)} devices")
+    return Mesh(np.asarray(devs[:n]), (axis,))
 
 
 def make_local_mesh(axes=("data", "model"), shape=None):

@@ -20,7 +20,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from ..distributed.ctx import DP, MODEL, constrain, fetch
+from ..distributed.ctx import DP, MODEL, anchor_params, constrain, fetch
 from .attention import (
     cross_apply,
     cross_init,
@@ -210,6 +210,9 @@ def _run_groups(
         def body(carry, xs):
             x, aux = carry
             p_slice, c_slice = xs
+            # pin the dynamic-sliced layer weights to their storage layout
+            # before the TP-layout fetches (see ctx.anchor_params)
+            p_slice = anchor_params(p_slice)
             out, nc, a = _block_apply(
                 cfg, specs, p_slice, x, positions, c_slice, cache_pos,
                 causal, enc_out, mode,

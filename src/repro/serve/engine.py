@@ -46,23 +46,27 @@ class ServeEngine:
         max_len: int,
         enc_len: int = 0,
         autotune_sparse: bool = True,
+        mesh=None,
     ):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.enc_len = enc_len
+        self.mesh = mesh
         self.sparse_plans = {}
         if autotune_sparse and getattr(cfg, "sable", None) is not None:
             # Resolve sparse-matmul strategies BEFORE jit traces the model:
             # choose_matmul_strategy inside a trace can only fall back to the
             # device heuristic, while here it loads (or measures and
             # persists) the per-pattern plan from the shared plan cache.
+            # With mesh= the per-shard plans are warmed too, so a sharded
+            # deployment restarts with zero re-benchmarks.
             from ..models.layers import sable_patterns
             from ..sparse.linear import warm_matmul_plans
 
             pats = sable_patterns(cfg)
             if _has_sparse_ffn(params, pats):
-                self.sparse_plans = warm_matmul_plans(pats.values())
+                self.sparse_plans = warm_matmul_plans(pats.values(), mesh=mesh)
 
         @jax.jit
         def _prefill(params, tokens, cache, enc_out):

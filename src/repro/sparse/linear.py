@@ -226,11 +226,16 @@ def choose_matmul_strategy(
     allow_bench: bool = True,
     warmup: int = 1,
     iters: int = 3,
+    shard=None,
 ) -> str:
     """Measured (or cached) choice between the grouped-einsum and Pallas
     sparse-matmul strategies for one pattern — the ``sparse.linear``
     counterpart of ``core.autotune``, persisted through the same plan cache
     keyed by ``pattern_hash``.
+
+    ``shard=(shard_id, num_shards)`` keys the plan per shard of a device
+    mesh (heterogeneous pools can then record different winners per
+    device; see ``core.cache.plan_key``).
 
     On CPU the Pallas kernel only runs in interpret mode and can never win,
     so the candidate set collapses to ``grouped`` and no benchmark runs.
@@ -239,15 +244,20 @@ def choose_matmul_strategy(
     from ..core.staging import StagingOptions
 
     phash = pattern_hash(pattern)
-    found = _STRATEGY_REGISTRY.get(phash)
+    reg_key = phash if shard is None else f"{phash}@s{shard[0]}of{shard[1]}"
+    found = _STRATEGY_REGISTRY.get(reg_key)
     if found is not None:
         return found
     device = jax.default_backend()
-    key = cachelib.plan_key("linear", phash, device)
+    key = cachelib.plan_key(
+        "linear", phash, device,
+        shard_id=None if shard is None else shard[0],
+        num_shards=None if shard is None else shard[1],
+    )
     store = cache if cache is not None else cachelib.default_cache()
     plan = store.load_plan(key)
     if plan is not None:
-        _STRATEGY_REGISTRY[phash] = plan.options.backend
+        _STRATEGY_REGISTRY[reg_key] = plan.options.backend
         return plan.options.backend
 
     candidates = ["grouped"] + (["pallas"] if device == "tpu" else [])
@@ -289,6 +299,8 @@ def choose_matmul_strategy(
             "tk": pattern.tk,
             "n_tiles": pattern.n_tiles,
             "density": pattern.density,
+            **({} if shard is None else
+               {"shard_id": shard[0], "num_shards": shard[1]}),
         },
         source=source,
     )
@@ -296,25 +308,80 @@ def choose_matmul_strategy(
     # persistent cache so a later warm_matmul_plans() can still measure
     if source == "measured" or len(candidates) == 1:
         store.store_plan(key, plan)
-        _STRATEGY_REGISTRY[phash] = best
+        _STRATEGY_REGISTRY[reg_key] = best
     return best
 
 
-def warm_matmul_plans(patterns, batch: int = 8, cache=None) -> dict:
+def _seed_shard_strategy(pattern: BlockPattern, shard, strategy: str,
+                         cache=None) -> str:
+    """Record ``strategy`` under a per-shard plan key WITHOUT benchmarking
+    (the device measured the full pattern once; a shard sees the same
+    pattern, so the winner is inherited).  A plan already stored under the
+    shard key — e.g. measured on that specific device of a heterogeneous
+    pool — wins over the inherited default."""
+    from ..core import cache as cachelib
+    from ..core.staging import StagingOptions
+
+    phash = pattern_hash(pattern)
+    reg_key = f"{phash}@s{shard[0]}of{shard[1]}"
+    found = _STRATEGY_REGISTRY.get(reg_key)
+    if found is not None:
+        return found
+    device = jax.default_backend()
+    key = cachelib.plan_key("linear", phash, device,
+                            shard_id=shard[0], num_shards=shard[1])
+    store = cache if cache is not None else cachelib.default_cache()
+    plan = store.load_plan(key)
+    if plan is None:
+        plan = cachelib.TuningPlan(
+            kind="linear",
+            structure_hash=phash,
+            options=StagingOptions(backend=strategy,
+                                   tile=(pattern.tm, pattern.tk)),
+            device=device,
+            meta={"shard_id": shard[0], "num_shards": shard[1]},
+            source="inherited",
+        )
+        store.store_plan(key, plan)
+    _STRATEGY_REGISTRY[reg_key] = plan.options.backend
+    return plan.options.backend
+
+
+def warm_matmul_plans(patterns, batch: int = 8, cache=None, mesh=None,
+                      shard_axis: str = "shards") -> dict:
     """Resolve strategies for many patterns ahead of tracing (server
-    startup hook — e.g. ``ServeEngine``).  Returns {hash: strategy}."""
+    startup hook — e.g. ``ServeEngine``).  Returns {hash: strategy}.
+
+    With ``mesh=`` the per-shard plan keys for the mesh's shard axis are
+    resolved too (``<hash>@sIofN``): the measured winner is benchmarked
+    ONCE per pattern and inherited by every shard (no per-shard
+    re-benchmarks); a per-shard plan already on disk overrides it."""
     out = {}
+    shard_ids = []
+    if mesh is not None:
+        from ..core.sharded import resolve_shard_axis
+
+        axis = resolve_shard_axis(mesh, shard_axis)
+        shard_ids = list(range(int(mesh.shape[axis])))
     for p in patterns:
-        out[pattern_hash(p)] = choose_matmul_strategy(p, batch=batch, cache=cache)
+        base = choose_matmul_strategy(p, batch=batch, cache=cache)
+        out[pattern_hash(p)] = base
+        for i in shard_ids:
+            shard = (i, len(shard_ids))
+            out[f"{pattern_hash(p)}@s{i}of{len(shard_ids)}"] = (
+                _seed_shard_strategy(p, shard, base, cache=cache)
+            )
     return out
 
 
-def sparse_matmul_auto(x: jnp.ndarray, tiles: jnp.ndarray, pattern: BlockPattern):
+def sparse_matmul_auto(x: jnp.ndarray, tiles: jnp.ndarray,
+                       pattern: BlockPattern, shard=None):
     """Plan-dispatched sparse matmul.  Inside a jit trace an unresolved
     pattern falls back to the device heuristic WITHOUT benchmarking (a
     micro-benchmark mid-trace would compile-thrash); call
     ``warm_matmul_plans`` first to get measured choices under jit.
     """
     tracing = isinstance(x, jax.core.Tracer)
-    strategy = choose_matmul_strategy(pattern, allow_bench=not tracing)
+    strategy = choose_matmul_strategy(pattern, allow_bench=not tracing,
+                                      shard=shard)
     return _MATMUL_IMPLS[strategy](x, tiles, pattern)

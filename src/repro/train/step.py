@@ -9,12 +9,13 @@ toggle via ParallelConfig.compress_grads).
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
+from ..distributed.ctx import activation_sharding
 from ..distributed.sharding import ParallelConfig
 from ..models.config import ModelConfig
 from ..models.transformer import forward_train
@@ -38,10 +39,16 @@ def make_train_step(
     opt_cfg: AdamWConfig,
     pc: ParallelConfig = ParallelConfig(),
     schedule: Optional[Callable] = None,
+    mesh=None,
 ) -> Callable:
     """Returns step(params, opt_state, batch, step) -> (params, opt_state,
     metrics).  Pure; jit/pjit it with the sharding trees from
-    ``distributed.sharding``."""
+    ``distributed.sharding``.
+
+    With ``mesh=`` the activation-sharding context is entered inside the
+    step itself, so every trace carries the resolved constraints (incl.
+    the scanned-weight anchors) without the launcher holding an
+    ``activation_sharding`` block around tracing."""
 
     def loss_fn(params, batch):
         logits, aux = forward_train(params, cfg, batch)
@@ -49,14 +56,22 @@ def make_train_step(
         return ce + aux, {"ce": ce, "aux": aux}
 
     def step_fn(params, opt_state, batch, step):
-        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            params, batch
+        ctx = (
+            activation_sharding(mesh, pc, invalidate=False)
+            if mesh is not None
+            else contextlib.nullcontext()
         )
-        if pc.compress_grads:
-            grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
-        lr = schedule(step) if schedule is not None else opt_cfg.lr
-        params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg, lr)
-        metrics = {"loss": loss, "lr": jnp.asarray(lr), **parts, **om}
+        with ctx:
+            (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+            if pc.compress_grads:
+                grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+            lr = schedule(step) if schedule is not None else opt_cfg.lr
+            params, opt_state, om = adamw_update(
+                params, grads, opt_state, opt_cfg, lr
+            )
+            metrics = {"loss": loss, "lr": jnp.asarray(lr), **parts, **om}
         return params, opt_state, metrics
 
     return step_fn

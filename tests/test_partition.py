@@ -1,0 +1,231 @@
+"""Structure-aware partitioner + sharded staged execution (single process).
+
+Multi-device shard_map equivalence lives in tests/test_distributed.py
+(subprocess with forced host devices); here: partition invariants, cache
+round-trips, and host-loop numerical equivalence.
+"""
+import numpy as np
+import pytest
+
+from repro.core import vbr as vbrlib
+from repro.core.cache import PlanCache
+from repro.core.staging import StagingOptions, clear_cache, stage_spmm, stage_spmv
+from repro.distributed.partition import (
+    block_row_nnz,
+    load_shard_plan,
+    make_shard_plan,
+    partition_nnz_balanced,
+    save_shard_plan,
+    shard_vbr,
+)
+
+
+@pytest.fixture(autouse=True)
+def _fresh(monkeypatch, tmp_path):
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path / "cache"))
+    clear_cache()
+    yield
+    clear_cache()
+
+
+def _mk(seed=0, rows=240, cols=200, rs=24, cs=20, nb=90, sp=0.25):
+    return vbrlib.synthesize(rows, cols, rs, cs, nb, sp, uniform=False, seed=seed)
+
+
+# --------------------------------------------------------------------- #
+# partition invariants
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("strategy", ["lpt", "contiguous"])
+def test_partition_covers_every_row_once(strategy):
+    """Shard row spans tile the matrix rows exactly (no gap, no overlap)."""
+    v = _mk(seed=1)
+    plan = make_shard_plan(v, 4, strategy)
+    allrows = np.sort(np.concatenate([s.row_index for s in plan.shards]))
+    np.testing.assert_array_equal(allrows, np.arange(v.shape[0]))
+    # and the nnz accounting is exact
+    assert int(plan.nnz_per_shard().sum()) == v.stored_nnz
+
+
+@pytest.mark.parametrize("strategy", ["lpt", "contiguous"])
+@pytest.mark.parametrize("num_shards", [2, 4, 8])
+def test_partition_balance_bound(strategy, num_shards):
+    """Worst shard holds <= 1.5x the mean nnz on random VBR structures."""
+    for seed in range(4):
+        v = _mk(seed=seed)
+        plan = make_shard_plan(v, num_shards, strategy)
+        assert plan.imbalance() <= 1.5, (
+            f"seed={seed} {strategy} x{num_shards}: {plan.imbalance():.3f}"
+        )
+        np.testing.assert_array_equal(
+            np.sort(plan.nnz_per_shard())[::-1].sum(), v.stored_nnz
+        )
+
+
+def test_partition_balances_nnz_not_row_count():
+    """One giant block row + many tiny ones: row-count splitting would put
+    the giant with others; nnz balancing splits the giant across shards."""
+    dense = np.zeros((128, 64), np.float32)
+    dense[:64] = 1.0  # block row 0: 64x64 dense (4096 nnz)
+    for i in range(8):  # 8 tiny 8x8 blocks (512 nnz total)
+        dense[64 + 8 * i : 72 + 8 * i, :8] = 1.0
+    v = vbrlib.from_dense(dense, [0, 64] + list(range(72, 136, 8)), [0, 8, 64])
+    sizes = block_row_nnz(v)
+    assert sizes[0] == 64 * 64
+    plan = make_shard_plan(v, 2, "lpt")
+    # an indivisible block row would force 4096/2304 imbalance; row-span
+    # splitting keeps the bound
+    assert plan.imbalance() <= 1.5
+
+
+def test_more_shards_than_rows():
+    v = _mk(seed=2, rs=3, cs=3, nb=6)
+    plan = make_shard_plan(v, 8)
+    assert plan.num_shards == 8
+    allrows = np.sort(np.concatenate([s.row_index for s in plan.shards]))
+    np.testing.assert_array_equal(allrows, np.arange(v.shape[0]))
+
+
+# --------------------------------------------------------------------- #
+# shard-local structure correctness
+# --------------------------------------------------------------------- #
+def test_shard_vbr_reconstructs_rows():
+    v = _mk(seed=3)
+    dense = v.to_dense()
+    plan = make_shard_plan(v, 4)
+    seen = np.zeros(v.shape[0], bool)
+    for s in plan.shards:
+        sub = s.vbr.to_dense()
+        np.testing.assert_array_equal(sub, dense[s.row_index])
+        # runtime reslice of a FRESH global val matches the baked shard val
+        np.testing.assert_array_equal(v.val[s.val_index], s.vbr.val)
+        assert not seen[s.row_index].any()
+        seen[s.row_index] = True
+
+
+# --------------------------------------------------------------------- #
+# cache round-trips
+# --------------------------------------------------------------------- #
+def test_shard_structures_roundtrip_cache(tmp_path):
+    """Per-shard indirection arrays survive the persistent structure cache."""
+    cache = PlanCache(str(tmp_path / "c"))
+    v = _mk(seed=4)
+    plan = make_shard_plan(v, 4)
+    for s in plan.shards:
+        h = vbrlib.structure_hash(s.vbr)
+        cache.store_structure(s.vbr)
+        back = cache.load_structure(h)
+        assert back is not None
+        for f in ("rpntr", "cpntr", "bindx", "bpntrb", "bpntre", "indx"):
+            np.testing.assert_array_equal(getattr(back, f), getattr(s.vbr, f))
+        assert back.shape == s.vbr.shape
+
+
+def test_shard_plan_roundtrip_cache(tmp_path):
+    cache = PlanCache(str(tmp_path / "c"))
+    v = _mk(seed=5)
+    plan = make_shard_plan(v, 4, "contiguous")
+    save_shard_plan(plan, cache)
+    back = load_shard_plan(v, 4, "contiguous", cache)
+    assert back is not None
+    assert back.shard_hashes() == plan.shard_hashes()
+    for a, b in zip(plan.shards, back.shards):
+        assert a.spans == b.spans
+        np.testing.assert_array_equal(a.val_index, b.val_index)
+    # miss on a different shard count / strategy
+    assert load_shard_plan(v, 3, "contiguous", cache) is None
+    assert load_shard_plan(v, 4, "lpt", cache) is None
+
+
+# --------------------------------------------------------------------- #
+# single- vs multi-shard numerical equivalence (host loop)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("num_shards", [1, 3, 8])
+def test_sharded_spmv_matches_single(num_shards):
+    import jax.numpy as jnp
+
+    for seed in range(3):
+        v = _mk(seed=10 + seed)
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal(v.shape[1]).astype(np.float32)
+        ref = np.asarray(stage_spmv(v)(jnp.asarray(v.val), jnp.asarray(x)))
+        got = np.asarray(
+            stage_spmv(v, shards=num_shards)(jnp.asarray(v.val), jnp.asarray(x))
+        )
+        np.testing.assert_allclose(got, ref, atol=1e-6, rtol=1e-6)
+
+
+def test_sharded_spmm_matches_single():
+    import jax.numpy as jnp
+
+    v = _mk(seed=20)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((v.shape[1], 8)).astype(np.float32)
+    ref = np.asarray(stage_spmm(v, 8)(jnp.asarray(v.val), jnp.asarray(x)))
+    got = np.asarray(
+        stage_spmm(v, 8, shards=4)(jnp.asarray(v.val), jnp.asarray(x))
+    )
+    np.testing.assert_allclose(got, ref, atol=1e-6, rtol=1e-6)
+
+
+def test_sharded_unrolled_backend():
+    """Sharding composes with a non-default backend choice."""
+    import jax.numpy as jnp
+
+    v = _mk(seed=21, rs=6, cs=5, nb=12)
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal(v.shape[1]).astype(np.float32)
+    opts = StagingOptions(backend="unrolled")
+    ref = np.asarray(stage_spmv(v, opts)(jnp.asarray(v.val), jnp.asarray(x)))
+    got = np.asarray(
+        stage_spmv(v, opts, shards=3)(jnp.asarray(v.val), jnp.asarray(x))
+    )
+    # different per-row accumulation order than the monolithic kernel
+    np.testing.assert_allclose(got, ref, atol=5e-6, rtol=1e-5)
+
+
+def test_linear_shard_plans_inherit_without_rebench(tmp_path):
+    """warm_matmul_plans(mesh-less shard seeding): the base winner is
+    measured once, shards inherit it, and a per-shard plan on disk wins."""
+    from repro.core.cache import PlanCache, TuningPlan, plan_key
+    from repro.core.staging import StagingOptions
+    from repro.sparse import linear
+
+    cache = PlanCache(str(tmp_path / "c"))
+    pat = linear.random_pattern(32, 48, 8, 8, density=0.5)
+    phash = linear.pattern_hash(pat)
+    linear._STRATEGY_REGISTRY.clear()
+    base = linear.choose_matmul_strategy(pat, cache=cache)
+    # seed two shards from the base winner — no extra benchmarks, but a
+    # pre-stored per-shard plan (heterogeneous pool) must override
+    override_key = plan_key("linear", phash, "cpu", shard_id=1, num_shards=2)
+    cache.store_plan(override_key, TuningPlan(
+        kind="linear", structure_hash=phash,
+        options=StagingOptions(backend="pallas"), device="cpu",
+        source="measured"))
+    s0 = linear._seed_shard_strategy(pat, (0, 2), base, cache=cache)
+    s1 = linear._seed_shard_strategy(pat, (1, 2), base, cache=cache)
+    assert s0 == base
+    assert s1 == "pallas"  # disk plan wins over the inherited default
+    # and the dispatcher consults the per-shard registry entry
+    assert linear.choose_matmul_strategy(pat, cache=cache, shard=(0, 2)) == base
+    linear._STRATEGY_REGISTRY.clear()
+
+
+def test_sharded_autotune_persists_per_shard_plans(tmp_path, monkeypatch):
+    import os
+
+    import jax.numpy as jnp
+
+    root = str(tmp_path / "plans")
+    monkeypatch.setenv("REPRO_CACHE_DIR", root)
+    v = _mk(seed=22)
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal(v.shape[1]).astype(np.float32)
+    kern = stage_spmv(v, StagingOptions(backend="autotune"), shards=3)
+    ref = np.asarray(stage_spmv(v)(jnp.asarray(v.val), jnp.asarray(x)))
+    got = np.asarray(kern(jnp.asarray(v.val), jnp.asarray(x)))
+    np.testing.assert_allclose(got, ref, atol=1e-6, rtol=1e-6)
+    names = os.listdir(os.path.join(root, "plans"))
+    shard_keys = [n for n in names if "of3" in n]
+    assert len(shard_keys) == 3  # one tuned plan per shard, parent-hash keyed
+    assert any(n.startswith("shards-") for n in names)  # partition record
