@@ -1,0 +1,96 @@
+"""2-D (shards x model) mesh factorization sweep for sharded staged SpMM.
+
+Sweeps every (shards, model) factorization of 8 forced host devices —
+(8,1), (4,2), (2,4), (1,8) — for the same structure and RHS width, with
+the overlapped ppermute-ring gather on and off.  On forced host devices
+(shared physical cores) wall-clock speedup is not expected; the sweep's
+value is the relative cost of the factorizations (how much of the work
+moves from the shard split to the column split) and a regression guard on
+the 2-D path's compile/run health.  ``derived`` carries the partition
+imbalance and the overlap flag next to the measured time.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from .common import csv_row
+
+_CHILD = """
+import json, numpy as np, jax, jax.numpy as jnp
+from repro.core import vbr as vbrlib
+from repro.core.staging import stage_spmm
+from repro.launch.mesh import make_staging_mesh
+from benchmarks.common import timeit
+
+quick = {quick}
+n = 600 if quick else 2000
+n_cols = 16
+iters = 3 if quick else 8
+rs, cs, nb = (24, 24, 90) if quick else (60, 60, 600)
+v = vbrlib.synthesize(n, n, rs, cs, nb, 0.2, False, seed=nb)
+rng = np.random.default_rng(0)
+X = jnp.asarray(rng.standard_normal((n, n_cols)).astype(np.float32))
+val = jnp.asarray(v.val)
+rows = []
+base = timeit(stage_spmm(v, n_cols), val, X, warmup=2, iters=iters)
+rows.append({{"matrix": f"Matrix_{{rs}}_{{cs}}_{{nb}}", "shards": 0, "model": 0,
+              "overlap": False, "spmm_s": base, "imbalance": 1.0}})
+for shards, model in [(8, 1), (4, 2), (2, 4), (1, 8)]:
+    mesh = make_staging_mesh((shards, model))
+    for overlap in (True, False):
+        k = stage_spmm(v, n_cols, mesh=mesh, overlap_gather=overlap)
+        t = timeit(k, val, X, warmup=2, iters=iters)
+        rows.append({{
+            "matrix": f"Matrix_{{rs}}_{{cs}}_{{nb}}",
+            "shards": shards,
+            "model": model,
+            "overlap": overlap,
+            "spmm_s": t,
+            "imbalance": k.imbalance(),
+        }})
+print("RESULT " + json.dumps(rows))
+"""
+
+
+def main(quick: bool = False) -> None:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in ["src", env.get("PYTHONPATH", ""), "."] if p
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", _CHILD.format(quick=quick)],
+        capture_output=True, text=True, env=env, timeout=1800,
+    )
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"mesh2d bench subprocess failed:\n{out.stdout}\n{out.stderr}"
+        )
+    rows = []
+    for line in out.stdout.splitlines():
+        if line.startswith("RESULT "):
+            rows = json.loads(line[len("RESULT "):])
+    base = next((r["spmm_s"] for r in rows if r["shards"] == 0), None)
+    for r in rows:
+        if r["shards"] == 0:
+            csv_row(
+                f"mesh2d/{r['matrix']}/spmm/unsharded", r["spmm_s"] * 1e6,
+                "speedup=1.00",
+            )
+            continue
+        csv_row(
+            f"mesh2d/{r['matrix']}/spmm/s{r['shards']}m{r['model']}"
+            f"{'o' if r['overlap'] else ''}",
+            r["spmm_s"] * 1e6,
+            f"speedup={base / max(r['spmm_s'], 1e-12):.2f},"
+            f"imbalance={r['imbalance']:.3f},"
+            f"overlap={int(r['overlap'])}",
+        )
+
+
+if __name__ == "__main__":
+    main(quick=True)

@@ -23,6 +23,7 @@ from . import (
     bench_autotune,
     bench_codegen_variants,
     bench_inspection,
+    bench_mesh2d,
     bench_scaling,
     bench_sharded,
     bench_sparsity_sweep,
@@ -42,9 +43,10 @@ SUITES = {
     "roofline": roofline.main,  # §Roofline (from dry-run artifacts)
     "autotune": bench_autotune.main,  # ISSUE 1: cold/warm plan cache
     "sharded": bench_sharded.main,  # ISSUE 3: 1/2/4/8-device shard_map
+    "mesh2d": bench_mesh2d.main,  # ISSUE 5: (shards x model) factorizations
 }
 
-SMOKE_SUITES = ("spmv", "sharded")
+SMOKE_SUITES = ("spmv", "sharded", "mesh2d")
 
 
 def main() -> None:

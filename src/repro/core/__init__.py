@@ -13,7 +13,7 @@ from .staging import (
     stage_spmm,
     stage_spmv,
 )
-from .sharded import ShardedStagedKernel, resolve_shard_axis
+from .sharded import ShardedStagedKernel, resolve_model_axis, resolve_shard_axis
 from .uniformize import TiledPattern, uniformize
 from .cache import PlanCache, TuningPlan, default_cache, plan_key, set_default_cache
 # NB: the bare `autotune` function is NOT re-exported — it would shadow the

@@ -144,6 +144,7 @@ def plan_key(
     n_cols=None,
     shard_id=None,
     num_shards=None,
+    model_cols=None,
 ) -> str:
     """Filename-safe cache key.  Plans are per-device: the measured-best
     backend on a TPU (pallas) is not the best on CPU (grouped).
@@ -152,6 +153,10 @@ def plan_key(
     ``(shard_id, num_shards)`` — ``...-s3of8`` — so a shard's tuned plan is
     found from the parent pattern without re-deriving the sub-structure
     hash.  ``num_shards`` alone (``...-x8``) keys whole-partition records.
+    On a 2-D (shards x model) mesh the SpMM RHS is column-partitioned, so
+    each shard stages for its LOCAL column count; ``model_cols`` —
+    ``...-mc4`` — keys those plans apart from the full-width ones and a
+    warm restart of the same mesh factorization re-benchmarks nothing.
     """
     parts = [kind, structure_hash, device]
     if n_cols is not None:
@@ -160,6 +165,8 @@ def plan_key(
         parts.append(f"s{int(shard_id)}of{int(num_shards or 0)}")
     elif num_shards is not None:
         parts.append(f"x{int(num_shards)}")
+    if model_cols is not None:
+        parts.append(f"mc{int(model_cols)}")
     return "-".join(parts)
 
 

@@ -463,23 +463,30 @@ def stage_spmv(
     mesh=None,
     shards: Optional[int] = None,
     shard_axis: str = "shards",
+    model_axis: str = "model",
     shard_strategy: str = "lpt",
+    overlap_gather: bool = True,
 ):
     """Stage a pattern-specialized SpMV kernel.
 
-    With ``mesh=`` (a 1-D device mesh, see ``launch.mesh.make_staging_mesh``)
-    or ``shards=N``, the block rows are partitioned into nnz-balanced
-    shards, each shard is staged for its own block-size distribution, and
-    execution runs under ``shard_map`` across the mesh (``shards=`` alone:
-    a host-loop reference of the same split).  Returns a
-    :class:`~repro.core.sharded.ShardedStagedKernel` in that case.
+    With ``mesh=`` (a 1-D or 2-D device mesh, see
+    ``launch.mesh.make_staging_mesh``) or ``shards=N``, the block rows are
+    partitioned into nnz-balanced shards, each shard is staged for its own
+    block-size distribution, and execution runs under ``shard_map`` across
+    the mesh (``shards=`` alone: a host-loop reference of the same split).
+    Returns a :class:`~repro.core.sharded.ShardedStagedKernel` in that
+    case.  ``overlap_gather`` (default on) assembles the output with a
+    ``ppermute`` ring inside ``shard_map`` so gather traffic overlaps
+    shard compute instead of a trailing all-gather.
     """
     if mesh is not None or shards is not None:
         from .sharded import ShardedStagedKernel
 
         return ShardedStagedKernel(
             "spmv", vbr, opts, num_shards=shards, mesh=mesh,
-            shard_axis=shard_axis, strategy=shard_strategy, hints=value_hints,
+            shard_axis=shard_axis, model_axis=model_axis,
+            strategy=shard_strategy, hints=value_hints,
+            overlap_gather=overlap_gather,
         )
     if opts.backend == "autotune":
         from .autotune import autotune_stage
@@ -498,17 +505,21 @@ def stage_spmm(
     mesh=None,
     shards: Optional[int] = None,
     shard_axis: str = "shards",
+    model_axis: str = "model",
     shard_strategy: str = "lpt",
+    overlap_gather: bool = True,
 ):
     """Stage a pattern-specialized SpMM kernel; ``mesh=``/``shards=`` as in
-    :func:`stage_spmv`."""
+    :func:`stage_spmv`.  On a 2-D (shards x model) mesh the RHS columns
+    are partitioned over the model axis (``n_cols`` must divide evenly)."""
     if mesh is not None or shards is not None:
         from .sharded import ShardedStagedKernel
 
         return ShardedStagedKernel(
             "spmm", vbr, opts, num_shards=shards, mesh=mesh,
-            shard_axis=shard_axis, strategy=shard_strategy, hints=value_hints,
-            n_cols=n_cols,
+            shard_axis=shard_axis, model_axis=model_axis,
+            strategy=shard_strategy, hints=value_hints,
+            n_cols=n_cols, overlap_gather=overlap_gather,
         )
     if opts.backend == "autotune":
         from .autotune import autotune_stage

@@ -33,20 +33,46 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_staging_mesh(num_shards: int | None = None, axis: str = "shards"):
-    """1-D mesh for sharded staged execution (``stage_spmv(..., mesh=)``).
+def make_staging_mesh(
+    num_shards: int | tuple | None = None,
+    axis: str = "shards",
+    *,
+    model: int | None = None,
+    model_axis: str = "model",
+):
+    """Mesh for sharded staged execution (``stage_spmv(..., mesh=)``).
 
-    Uses the first ``num_shards`` devices (all of them by default).  On CPU,
-    force multiple host devices first:
+    1-D (the PR-3 behaviour): ``make_staging_mesh(8)`` — a ``"shards"``
+    axis over the first 8 devices.  2-D: ``make_staging_mesh(4, model=2)``
+    or ``make_staging_mesh((4, 2))`` — a ``("shards", "model")`` mesh where
+    the model axis column-partitions the dense SpMM operand (and composes
+    with tensor-parallel layers; see docs/architecture.md).  On CPU, force
+    multiple host devices first:
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
     """
     from jax.sharding import Mesh
 
+    if isinstance(num_shards, (tuple, list)):
+        if model is not None:
+            raise ValueError("pass either a (shards, model) tuple or model=")
+        num_shards, model = (int(d) for d in num_shards)
     devs = jax.devices()
-    n = num_shards if num_shards is not None else len(devs)
-    if n > len(devs):
-        raise ValueError(f"asked for {n} shards but only {len(devs)} devices")
-    return Mesh(np.asarray(devs[:n]), (axis,))
+    if num_shards is not None:
+        n = num_shards
+    else:  # all devices by default; with model= given, shards fill the rest
+        n = len(devs) if model is None else len(devs) // max(model, 1)
+    if model is None:
+        if n > len(devs):
+            raise ValueError(
+                f"asked for {n} shards but only {len(devs)} devices"
+            )
+        return Mesh(np.asarray(devs[:n]), (axis,))
+    if n < 1 or n * model > len(devs):
+        raise ValueError(
+            f"asked for {n}x{model} mesh but only {len(devs)} devices"
+        )
+    grid = np.asarray(devs[: n * model]).reshape(n, model)
+    return Mesh(grid, (axis, model_axis))
 
 
 def make_local_mesh(axes=("data", "model"), shape=None):

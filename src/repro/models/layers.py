@@ -102,9 +102,16 @@ def ffn_apply(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
     if cfg.sable is not None and p["w1"].ndim == 3:
         pats = sable_patterns(cfg)
         p_in, p_out = pats["in"], pats["out"]
-        h = sparse_matmul_auto(x, fetch(p["w1"].astype(x.dtype), MODEL), p_in)
+        # out_model: the d_ff intermediate is the tensor-parallel dim — the
+        # constraint resolves through the activation_sharding ctx (no-op
+        # outside), matching the MODEL-sharded tiles fetched below
+        h = sparse_matmul_auto(
+            x, fetch(p["w1"].astype(x.dtype), MODEL), p_in, out_model=True
+        )
         if cfg.ffn_type == "swiglu":
-            g = sparse_matmul_auto(x, fetch(p["w3"].astype(x.dtype), MODEL), p_in)
+            g = sparse_matmul_auto(
+                x, fetch(p["w3"].astype(x.dtype), MODEL), p_in, out_model=True
+            )
             h = jax.nn.silu(h) * g
         else:
             h = _act(cfg, h)

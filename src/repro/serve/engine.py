@@ -59,8 +59,10 @@ class ServeEngine:
             # choose_matmul_strategy inside a trace can only fall back to the
             # device heuristic, while here it loads (or measures and
             # persists) the per-pattern plan from the shared plan cache.
-            # With mesh= the per-shard plans are warmed too, so a sharded
-            # deployment restarts with zero re-benchmarks.
+            # With mesh= (1-D shards or 2-D shards x model) the per-shard
+            # plans are warmed too, so a sharded deployment restarts with
+            # zero re-benchmarks; a mesh with no shard axis (pure TP/DP)
+            # warms the base plans only.
             from ..models.layers import sable_patterns
             from ..sparse.linear import warm_matmul_plans
 

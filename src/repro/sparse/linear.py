@@ -355,14 +355,21 @@ def warm_matmul_plans(patterns, batch: int = 8, cache=None, mesh=None,
     With ``mesh=`` the per-shard plan keys for the mesh's shard axis are
     resolved too (``<hash>@sIofN``): the measured winner is benchmarked
     ONCE per pattern and inherited by every shard (no per-shard
-    re-benchmarks); a per-shard plan already on disk overrides it."""
+    re-benchmarks); a per-shard plan already on disk overrides it.  2-D
+    (shards x model) staging meshes warm the same per-shard keys; a mesh
+    with no shard axis at all (e.g. a pure ("data", "model") production
+    mesh) warms the base plans only."""
     out = {}
     shard_ids = []
     if mesh is not None:
         from ..core.sharded import resolve_shard_axis
 
-        axis = resolve_shard_axis(mesh, shard_axis)
-        shard_ids = list(range(int(mesh.shape[axis])))
+        try:
+            axis = resolve_shard_axis(mesh, shard_axis)
+        except ValueError:
+            axis = None  # no shard axis (e.g. TP-only mesh): base plans only
+        if axis is not None:
+            shard_ids = list(range(int(mesh.shape[axis])))
     for p in patterns:
         base = choose_matmul_strategy(p, batch=batch, cache=cache)
         out[pattern_hash(p)] = base
@@ -375,13 +382,38 @@ def warm_matmul_plans(patterns, batch: int = 8, cache=None, mesh=None,
 
 
 def sparse_matmul_auto(x: jnp.ndarray, tiles: jnp.ndarray,
-                       pattern: BlockPattern, shard=None):
+                       pattern: BlockPattern, shard=None, mesh=None,
+                       out_model: bool = False):
     """Plan-dispatched sparse matmul.  Inside a jit trace an unresolved
     pattern falls back to the device heuristic WITHOUT benchmarking (a
     micro-benchmark mid-trace would compile-thrash); call
     ``warm_matmul_plans`` first to get measured choices under jit.
+
+    ``out_model=True`` marks the output's last dim as tensor-parallel:
+    with an explicit ``mesh=`` (1-D or 2-D staging mesh) the constraint
+    resolves against that mesh's model axis; without one it goes through
+    ``distributed.ctx.constrain`` placeholders, so the same call composes
+    with whatever ``activation_sharding`` context the launcher traced
+    under (and is a no-op outside any context).
     """
     tracing = isinstance(x, jax.core.Tracer)
     strategy = choose_matmul_strategy(pattern, allow_bench=not tracing,
                                       shard=shard)
-    return _MATMUL_IMPLS[strategy](x, tiles, pattern)
+    y = _MATMUL_IMPLS[strategy](x, tiles, pattern)
+    if out_model:
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            from ..core.sharded import resolve_model_axis
+
+            maxis = resolve_model_axis(mesh)
+            if maxis is not None:
+                y = jax.lax.with_sharding_constraint(
+                    y,
+                    NamedSharding(mesh, P(*([None] * (y.ndim - 1)), maxis)),
+                )
+        else:
+            from ..distributed.ctx import MODEL, constrain
+
+            y = constrain(y, *([None] * (y.ndim - 1) + [MODEL]))
+    return y

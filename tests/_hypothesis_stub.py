@@ -1,45 +1,145 @@
-"""Fallback decorators when ``hypothesis`` is not installed.
+"""Deterministic fallback when ``hypothesis`` is not installed.
 
-Property-based tests collect as skipped; deterministic tests in the same
-module keep running.  Usage in a test module::
+Instead of skipping, property-based tests run against FIXED-SEED samples
+drawn from a miniature strategy implementation: ``@given`` replays the
+test body over ``max_examples`` deterministic draws (seeded from the test
+name, stable across runs and machines), so tier-1 keeps real property
+coverage without the hypothesis dependency.  With hypothesis installed
+the real library is used and this module is never imported.  Usage in a
+test module::
 
     try:
         from hypothesis import given, settings, strategies as st
     except ImportError:  # pragma: no cover - exercised without hypothesis
         from _hypothesis_stub import given, settings, st
 """
-import pytest
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 10
 
 
-class _AnyStrategy:
-    """Stands in for ``hypothesis.strategies``: every attribute is a
-    callable returning None (the stub ``given`` never draws from it)."""
+class _Strategy:
+    """A deterministic value source: ``draw(rng)`` -> one example."""
+
+    def __init__(self, draw, label=""):
+        self._draw = draw
+        self._label = label
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+    def __repr__(self):
+        return f"_Strategy({self._label})"
+
+
+class _Strategies:
+    """Stands in for ``hypothesis.strategies`` — the subset the test suite
+    uses, drawing deterministically from a seeded Generator.  Unknown
+    strategies raise at collection time so a new test can't silently lose
+    its property coverage."""
+
+    @staticmethod
+    def integers(min_value=0, max_value=(1 << 31) - 1):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)),
+            f"integers({min_value}, {max_value})",
+        )
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)),
+            f"floats({min_value}, {max_value})",
+        )
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)), "booleans()")
+
+    @staticmethod
+    def sampled_from(elements):
+        seq = list(elements)
+        return _Strategy(
+            lambda rng: seq[int(rng.integers(len(seq)))],
+            f"sampled_from({seq!r})",
+        )
+
+    @staticmethod
+    def just(value):
+        return _Strategy(lambda rng: value, f"just({value!r})")
 
     def __getattr__(self, name):
-        def _strategy(*args, **kwargs):
-            return None
-
-        return _strategy
-
-
-st = _AnyStrategy()
+        raise NotImplementedError(
+            f"_hypothesis_stub has no strategy {name!r}; install hypothesis "
+            "or extend tests/_hypothesis_stub.py"
+        )
 
 
-def settings(*args, **kwargs):
+st = _Strategies()
+
+
+def settings(*args, max_examples=None, **kwargs):
+    """Record ``max_examples`` for the stub ``given`` loop; every other
+    hypothesis setting (deadline, suppress_health_check, ...) is
+    meaningless here and ignored."""
+
     def deco(fn):
+        if max_examples is not None:
+            fn._stub_max_examples = max_examples
         return fn
 
     return deco
 
 
-def given(*_args, **_kwargs):
-    def deco(fn):
-        @pytest.mark.skip(reason="hypothesis not installed")
-        def skipped():
-            pass
+def given(*args, **strategies):
+    """Replay the test over deterministic fixed-seed draws.
 
-        skipped.__name__ = fn.__name__
-        skipped.__doc__ = fn.__doc__
-        return skipped
+    Only keyword strategies are supported (the repo convention); each
+    example ``i`` draws every kwarg from a Generator seeded by
+    ``crc32(<test name>:<i>)`` — stable across runs, machines, and test
+    orderings.  A failing example re-raises with the drawn kwargs in the
+    message so it can be reproduced as a plain call.
+    """
+    if args:
+        raise TypeError(
+            "_hypothesis_stub.given supports keyword strategies only, e.g. "
+            "@given(seed=st.integers(0, 100))"
+        )
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def runner(*fargs, **fkwargs):
+            n = getattr(
+                runner,
+                "_stub_max_examples",
+                getattr(fn, "_stub_max_examples", DEFAULT_MAX_EXAMPLES),
+            )
+            name = f"{fn.__module__}.{fn.__qualname__}"
+            for i in range(n):
+                rng = np.random.default_rng(
+                    zlib.crc32(f"{name}:{i}".encode()) & 0x7FFFFFFF
+                )
+                drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                try:
+                    fn(*fargs, **dict(fkwargs, **drawn))
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example {i + 1}/{n} (fixed-seed stub): "
+                        f"{fn.__name__}(**{drawn!r})"
+                    ) from e
+
+        # pytest resolves fixtures from the (wrapped) signature; the drawn
+        # params are NOT fixtures, so expose only the non-strategy ones
+        params = [
+            p
+            for name, p in inspect.signature(fn).parameters.items()
+            if name not in strategies
+        ]
+        runner.__signature__ = inspect.Signature(params)
+        return runner
 
     return deco

@@ -1,0 +1,126 @@
+"""Regenerate the golden regression fixtures (tests/test_golden.py).
+
+Run from the repo root after an INTENTIONAL format/schema change::
+
+    PYTHONPATH=src python tests/fixtures/make_fixtures.py
+
+Each fixture freezes (a) a small VBR structure with values, (b) the
+dense-reference SpMV/SpMM outputs, (c) the structure hash, and (d) a
+serialized TuningPlan — so a change to the hash function, the VBR
+serialization, the partitioner, or the plan JSON schema fails the golden
+suite loudly instead of silently invalidating every persisted cache.
+"""
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(__file__), "..", "..", "src")
+)
+
+from repro.core import vbr as vbrlib  # noqa: E402
+from repro.core.cache import TuningPlan  # noqa: E402
+from repro.core.staging import StagingOptions  # noqa: E402
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+N_COLS = 6  # SpMM RHS width frozen into the fixtures
+
+_STRUCTURE_FIELDS = ("rpntr", "cpntr", "bindx", "bpntrb", "bpntre", "indx")
+
+
+def banded() -> vbrlib.VBR:
+    """Block-tridiagonal band: uniform 4-row/4-col splits, each block row
+    stores its diagonal neighbourhood."""
+    n = 48
+    rng = np.random.default_rng(101)
+    dense = np.zeros((n, n), np.float32)
+    B = 4
+    for a in range(n // B):
+        for b in range(max(a - 1, 0), min(a + 2, n // B)):
+            dense[a * B : (a + 1) * B, b * B : (b + 1) * B] = (
+                rng.standard_normal((B, B))
+            )
+    splits = list(range(0, n + 1, B))
+    return vbrlib.from_dense(dense, splits, splits)
+
+
+def arrow() -> vbrlib.VBR:
+    """Arrowhead: dense first block row + first block column + diagonal
+    (non-uniform splits; the classic 'one giant hub' structure)."""
+    n = 60
+    rng = np.random.default_rng(202)
+    dense = np.zeros((n, n), np.float32)
+    splits = [0, 12, 20, 28, 40, 48, 60]
+    R = len(splits) - 1
+    for b in range(R):  # first block row
+        dense[0 : splits[1], splits[b] : splits[b + 1]] = rng.standard_normal(
+            (splits[1], splits[b + 1] - splits[b])
+        )
+    for a in range(R):  # first block col + diagonal
+        dense[splits[a] : splits[a + 1], 0 : splits[1]] = rng.standard_normal(
+            (splits[a + 1] - splits[a], splits[1])
+        )
+        dense[
+            splits[a] : splits[a + 1], splits[a] : splits[a + 1]
+        ] = rng.standard_normal(
+            (splits[a + 1] - splits[a], splits[a + 1] - splits[a])
+        )
+    return vbrlib.from_dense(dense, splits, splits)
+
+
+def random_block() -> vbrlib.VBR:
+    """The paper's generator: non-uniform splits, 30 random blocks, 25%
+    in-block zeros — with empty block rows."""
+    return vbrlib.synthesize(
+        120, 100, 10, 8, 30, block_sparsity=0.25, uniform=False, seed=42
+    )
+
+
+def write_fixture(name: str, v: vbrlib.VBR) -> None:
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal(v.shape[1]).astype(np.float32)
+    X = rng.standard_normal((v.shape[1], N_COLS)).astype(np.float32)
+    dense = v.to_dense()
+    np.savez_compressed(
+        os.path.join(HERE, f"{name}.npz"),
+        shape=np.asarray(v.shape, np.int64),
+        val=v.val,
+        x=x,
+        X=X,
+        y_spmv=dense @ x,
+        y_spmm=dense @ X,
+        structure_hash=np.asarray(vbrlib.structure_hash(v)),
+        **{f: getattr(v, f) for f in _STRUCTURE_FIELDS},
+    )
+    # frozen plan record: exercises the on-disk JSON schema round-trip
+    plan = TuningPlan(
+        kind="spmv",
+        structure_hash=vbrlib.structure_hash(v),
+        options=StagingOptions(backend="grouped"),
+        device="cpu",
+        timings={"grouped": 1e-4, "unrolled": 2e-4},
+        num_workers=2,
+        meta={
+            "shape": [int(d) for d in v.shape],
+            "num_blocks": int(v.num_blocks),
+            "stored_nnz": int(v.stored_nnz),
+        },
+        source="measured",
+    )
+    with open(os.path.join(HERE, f"{name}_plan.json"), "w") as f:
+        json.dump(plan.to_dict(), f, indent=1, sort_keys=True)
+    print(
+        f"{name}: shape={v.shape} blocks={v.num_blocks} "
+        f"nnz={v.stored_nnz} hash={vbrlib.structure_hash(v)}"
+    )
+
+
+if __name__ == "__main__":
+    for name, build in [
+        ("banded", banded),
+        ("arrow", arrow),
+        ("random_block", random_block),
+    ]:
+        write_fixture(name, build())

@@ -14,7 +14,11 @@ def run_with_devices(script: str, n: int = 8) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
     env["PYTHONPATH"] = SRC
-    env.pop("JAX_PLATFORMS", None)
+    # pin the child to CPU explicitly: the forced host devices are a CPU
+    # feature, and leaving the platform unset makes jax PROBE for
+    # accelerator plugins first — on an image with the TPU toolchain
+    # installed that probe idles for minutes before falling back
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(script)],
         capture_output=True, text=True, env=env, timeout=560,
@@ -234,6 +238,75 @@ def test_sharded_staged_spmv_matches_single_on_8_devices():
         np.testing.assert_allclose(np.asarray(gotm), np.asarray(refm),
                                    atol=1e-6, rtol=1e-6)
         print("OK", float(kern.imbalance()))
+    """)
+    assert "OK" in out
+
+
+def test_mesh2d_spmm_matches_1d_and_unsharded_with_warm_restart(tmp_path):
+    """Acceptance (ISSUE 5): on 8 forced host devices, 2-D (shards x
+    model) SpMM — overlapped-gather path enabled — matches the 1-D mesh
+    and unsharded kernels within 1e-6, per-shard autotune plans are keyed
+    with the model column count, and a warm restart re-stages with ZERO
+    new plan files.  sparse_matmul_auto accepts the same 2-D mesh."""
+    out = run_with_devices(f"""
+        import os, numpy as np, jax, jax.numpy as jnp
+        os.environ["REPRO_CACHE_DIR"] = r"{tmp_path}"
+        from repro.core import vbr as vbrlib
+        from repro.core.staging import StagingOptions, clear_cache, stage_spmm
+        from repro.launch.mesh import make_staging_mesh
+
+        v = vbrlib.synthesize(160, 140, 12, 10, 36, block_sparsity=0.25,
+                              uniform=False, seed=7)
+        rng = np.random.default_rng(0)
+        X = jnp.asarray(rng.standard_normal((v.shape[1], 8)).astype(np.float32))
+        val = jnp.asarray(v.val)
+        ref = np.asarray(stage_spmm(v, 8)(val, X))
+
+        ref1d = np.asarray(jax.device_get(
+            stage_spmm(v, 8, mesh=make_staging_mesh(4))(val, X)))
+        np.testing.assert_allclose(ref1d, ref, atol=1e-6, rtol=1e-6)
+
+        # (2,4) with the default backend: pure 2-D equivalence
+        kern24 = stage_spmm(v, 8, mesh=make_staging_mesh((2, 4)))
+        assert kern24.overlap_gather and kern24.model_size == 4
+        got24 = np.asarray(jax.device_get(kern24(val, X)))
+        np.testing.assert_allclose(got24, ref, atol=1e-6, rtol=1e-6)
+        np.testing.assert_allclose(got24, ref1d, atol=1e-6, rtol=1e-6)
+
+        # (4,2) with autotune: per-shard plans keyed by model cols
+        opts = StagingOptions(backend="autotune")
+        mesh = make_staging_mesh((4, 2))
+        kern = stage_spmm(v, 8, opts, mesh=mesh)  # overlap_gather on
+        assert kern.overlap_gather and kern.model_size == 2
+        got = np.asarray(jax.device_get(kern(val, X)))
+        np.testing.assert_allclose(got, ref, atol=1e-6, rtol=1e-6)
+        np.testing.assert_allclose(got, ref1d, atol=1e-6, rtol=1e-6)
+
+        plans = os.path.join(r"{tmp_path}", "plans")
+        names = set(os.listdir(plans))
+        mc = [n for n in names if "-mc" in n]
+        assert len(mc) == 4, mc  # one plan per shard, keyed by model cols
+
+        # warm restart: fresh staging, zero new plan files
+        clear_cache()
+        kern = stage_spmm(v, 8, opts, mesh=make_staging_mesh((4, 2)))
+        got = np.asarray(jax.device_get(kern(val, X)))
+        np.testing.assert_allclose(got, ref, atol=1e-6, rtol=1e-6)
+        assert set(os.listdir(plans)) == names, "warm restart re-benchmarked"
+
+        # sparse_matmul_auto end-to-end on the same 2-D mesh
+        from repro.sparse import linear
+        pat = linear.random_pattern(64, 96, 8, 8, density=0.4)
+        tiles = jnp.asarray(rng.standard_normal(
+            (pat.n_tiles, 8, 8)).astype(np.float32))
+        xs = jnp.asarray(rng.standard_normal((4, 64)).astype(np.float32))
+        mesh = make_staging_mesh((2, 4))
+        dense_ref = np.asarray(linear.sparse_matmul(xs, tiles, pat))
+        got = np.asarray(jax.device_get(jax.jit(
+            lambda a, t: linear.sparse_matmul_auto(
+                a, t, pat, mesh=mesh, out_model=True))(xs, tiles)))
+        np.testing.assert_allclose(got, dense_ref, atol=1e-5, rtol=1e-5)
+        print("OK")
     """)
     assert "OK" in out
 

@@ -1,0 +1,344 @@
+"""Property-based differential equivalence over randomized VBR structures.
+
+Every staging backend x every execution mode {unsharded, sharded host
+loop, 1-D mesh, 2-D (shards x model) mesh} must agree with the dense
+reference, over generated structures spanning varying block-size
+distributions, empty block rows, and dense/hyper-sparse extremes; and the
+partitioner's balance bound must hold as an invariant (Ahrens & Boman:
+partition quality is a property of the structure, not of a hand-picked
+example).
+
+Runs under real hypothesis when installed; otherwise the deterministic
+fixed-seed sampler in ``_hypothesis_stub`` replays the same properties,
+so tier-1 keeps the coverage either way.  The mesh-path properties need
+multiple devices and skip unless
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the multidevice
+CI job).
+"""
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # keep deterministic sampling without hypothesis
+    from _hypothesis_stub import given, settings, st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import vbr as vbrlib
+from repro.core.staging import (
+    StagingOptions,
+    clear_cache,
+    stage_spmm,
+    stage_spmv,
+)
+from repro.distributed.partition import block_row_nnz, make_shard_plan
+
+BACKENDS = ["unrolled", "grouped", "bucketed", "gather"]
+TOL = dict(atol=3e-5, rtol=3e-5)
+
+
+# module-scoped (NOT per-function: function-scoped fixtures don't mix with
+# @given) cache isolation — sharded staging persists shard plans on disk
+@pytest.fixture(scope="module", autouse=True)
+def _cache_dir(tmp_path_factory):
+    d = tmp_path_factory.mktemp("equiv-cache")
+    old = os.environ.get("REPRO_CACHE_DIR")
+    os.environ["REPRO_CACHE_DIR"] = str(d)
+    clear_cache()
+    yield
+    clear_cache()
+    if old is None:
+        os.environ.pop("REPRO_CACHE_DIR", None)
+    else:
+        os.environ["REPRO_CACHE_DIR"] = old
+
+
+def _structure(rows, cols, rs, cs, nb_frac, sparsity, uniform, seed):
+    """Random VBR with a controlled block count: nb_frac sweeps from
+    hyper-sparse (a single stored block, most block rows empty) to fully
+    dense (every grid cell stored)."""
+    nb = max(1, int(round(nb_frac * rs * cs)))
+    return vbrlib.synthesize(
+        rows, cols, rs, cs, nb, sparsity, uniform, seed=seed
+    )
+
+
+def _inputs(v, n_cols=None, seed=0):
+    rng = np.random.default_rng(seed)
+    if n_cols is None:
+        return jnp.asarray(rng.standard_normal(v.shape[1]).astype(np.float32))
+    return jnp.asarray(
+        rng.standard_normal((v.shape[1], n_cols)).astype(np.float32)
+    )
+
+
+# --------------------------------------------------------------------- #
+# backends x dense reference
+# --------------------------------------------------------------------- #
+@settings(max_examples=10, deadline=None)
+@given(
+    rows=st.integers(6, 72),
+    cols=st.integers(6, 72),
+    rs=st.integers(1, 8),
+    cs=st.integers(1, 8),
+    nb_frac=st.floats(0.05, 1.0),
+    sparsity=st.floats(0.0, 0.95),
+    uniform=st.booleans(),
+    seed=st.integers(0, 100_000),
+)
+def test_spmv_backends_match_dense(
+    rows, cols, rs, cs, nb_frac, sparsity, uniform, seed
+):
+    v = _structure(rows, cols, rs, cs, nb_frac, sparsity, uniform, seed)
+    x = _inputs(v, seed=seed)
+    ref = v.to_dense() @ np.asarray(x)
+    val = jnp.asarray(v.val)
+    for backend in BACKENDS:
+        got = np.asarray(stage_spmv(v, StagingOptions(backend=backend))(val, x))
+        np.testing.assert_allclose(got, ref, err_msg=backend, **TOL)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    rows=st.integers(6, 64),
+    cols=st.integers(6, 64),
+    rs=st.integers(1, 6),
+    cs=st.integers(1, 6),
+    nb_frac=st.floats(0.1, 1.0),
+    sparsity=st.floats(0.0, 0.9),
+    n_cols=st.sampled_from([1, 3, 8]),
+    seed=st.integers(0, 100_000),
+)
+def test_spmm_backends_match_dense(
+    rows, cols, rs, cs, nb_frac, sparsity, n_cols, seed
+):
+    v = _structure(rows, cols, rs, cs, nb_frac, sparsity, False, seed)
+    X = _inputs(v, n_cols=n_cols, seed=seed)
+    ref = v.to_dense() @ np.asarray(X)
+    val = jnp.asarray(v.val)
+    for backend in ["unrolled", "grouped", "bucketed", "gather"]:
+        got = np.asarray(
+            stage_spmm(v, n_cols, StagingOptions(backend=backend))(val, X)
+        )
+        np.testing.assert_allclose(got, ref, err_msg=backend, **TOL)
+
+
+# --------------------------------------------------------------------- #
+# sharded (host loop) x dense reference + balance invariant
+# --------------------------------------------------------------------- #
+@settings(max_examples=10, deadline=None)
+@given(
+    rows=st.integers(12, 96),
+    cols=st.integers(8, 64),
+    rs=st.integers(2, 10),
+    cs=st.integers(1, 8),
+    nb_frac=st.floats(0.05, 1.0),
+    sparsity=st.floats(0.0, 0.9),
+    num_shards=st.integers(1, 8),
+    strategy=st.sampled_from(["lpt", "contiguous"]),
+    seed=st.integers(0, 100_000),
+)
+def test_sharded_host_matches_dense(
+    rows, cols, rs, cs, nb_frac, sparsity, num_shards, strategy, seed
+):
+    v = _structure(rows, cols, rs, cs, nb_frac, sparsity, False, seed)
+    x = _inputs(v, seed=seed)
+    ref = v.to_dense() @ np.asarray(x)
+    got = np.asarray(
+        stage_spmv(v, shards=num_shards, shard_strategy=strategy)(
+            jnp.asarray(v.val), x
+        )
+    )
+    np.testing.assert_allclose(got, ref, **TOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.integers(16, 120),
+    cols=st.integers(8, 80),
+    rs=st.integers(2, 12),
+    cs=st.integers(1, 8),
+    nb_frac=st.floats(0.05, 1.0),
+    sparsity=st.floats(0.0, 0.9),
+    num_shards=st.integers(2, 8),
+    strategy=st.sampled_from(["lpt", "contiguous"]),
+    seed=st.integers(0, 100_000),
+)
+def test_partition_invariants(
+    rows, cols, rs, cs, nb_frac, sparsity, num_shards, strategy, seed
+):
+    """Unconditional: the shards tile the rows exactly and preserve nnz.
+    Balance: worst shard <= ~1.5x mean whenever no single matrix row
+    dominates the per-shard mean (rows are the splitting granularity — a
+    single row heavier than a whole shard's fair share is unsplittable,
+    so no partitioner could do better there)."""
+    v = _structure(rows, cols, rs, cs, nb_frac, sparsity, False, seed)
+    plan = make_shard_plan(v, num_shards, strategy)
+    allrows = np.sort(np.concatenate([s.row_index for s in plan.shards]))
+    np.testing.assert_array_equal(allrows, np.arange(v.shape[0]))
+    assert int(plan.nnz_per_shard().sum()) == v.stored_nnz
+    total = v.stored_nnz
+    if total == 0:
+        return
+    sizes = block_row_nnz(v)
+    heights = np.diff(v.rpntr)
+    per_row_max = int((sizes // np.maximum(heights, 1)).max())
+    if per_row_max * 3 * num_shards <= total:
+        assert plan.imbalance() <= 1.5, (
+            f"{strategy} x{num_shards}: imbalance {plan.imbalance():.3f}"
+        )
+
+
+# --------------------------------------------------------------------- #
+# deterministic extremes (always run; no sampling needed)
+# --------------------------------------------------------------------- #
+def test_all_block_rows_empty():
+    """A structure whose stored-block set is empty: y must be exactly 0."""
+    v = vbrlib.from_dense(
+        np.zeros((12, 10), np.float32), [0, 4, 8, 12], [0, 5, 10]
+    )
+    assert v.num_blocks == 0
+    x = _inputs(v)
+    for backend in ["unrolled", "grouped", "gather"]:
+        got = np.asarray(
+            stage_spmv(v, StagingOptions(backend=backend))(jnp.asarray(v.val), x)
+        )
+        np.testing.assert_array_equal(got, np.zeros(12, np.float32))
+    got = np.asarray(stage_spmv(v, shards=4)(jnp.asarray(v.val), x))
+    np.testing.assert_array_equal(got, np.zeros(12, np.float32))
+
+
+def test_fully_dense_extreme():
+    """Every grid cell stored (block-dense): matches a plain dense matmul."""
+    v = _structure(24, 20, 4, 4, 1.0, 0.0, True, seed=3)
+    assert v.num_blocks == 16
+    x = _inputs(v)
+    ref = v.to_dense() @ np.asarray(x)
+    for backend in BACKENDS:
+        got = np.asarray(
+            stage_spmv(v, StagingOptions(backend=backend))(jnp.asarray(v.val), x)
+        )
+        np.testing.assert_allclose(got, ref, **TOL)
+
+
+def test_hyper_sparse_extreme_with_hybrid():
+    """A single stored block, nearly all zeros: the density-threshold
+    hybrid (COO tail) must agree with the dense path."""
+    v = _structure(40, 40, 8, 8, 1 / 64, 0.97, False, seed=11)
+    assert v.num_blocks == 1
+    x = _inputs(v)
+    ref = v.to_dense() @ np.asarray(x)
+    plain = np.asarray(stage_spmv(v)(jnp.asarray(v.val), x))
+    hybrid = np.asarray(
+        stage_spmv(
+            v, StagingOptions(backend="grouped", density_threshold=0.5)
+        )(jnp.asarray(v.val), x)
+    )
+    np.testing.assert_allclose(plain, ref, **TOL)
+    np.testing.assert_allclose(hybrid, ref, **TOL)
+
+
+def test_skewed_block_size_distribution():
+    """One giant block row next to many tiny ones — the distribution the
+    bucketed backend and the row-splitting partitioner exist for."""
+    dense = np.zeros((100, 60), np.float32)
+    rng = np.random.default_rng(5)
+    dense[:52, :60] = rng.standard_normal((52, 60))  # giant
+    for i in range(12):
+        dense[52 + 4 * i : 56 + 4 * i, :4] = rng.standard_normal((4, 4))
+    v = vbrlib.from_dense(
+        dense, [0, 52] + list(range(56, 104, 4)), [0, 4, 60]
+    )
+    x = _inputs(v)
+    ref = dense @ np.asarray(x)
+    for backend in BACKENDS:
+        got = np.asarray(
+            stage_spmv(v, StagingOptions(backend=backend))(jnp.asarray(v.val), x)
+        )
+        np.testing.assert_allclose(got, ref, err_msg=backend, **TOL)
+    plan = make_shard_plan(v, 4)
+    assert plan.imbalance() <= 1.5
+    got = np.asarray(stage_spmv(v, shards=4)(jnp.asarray(v.val), x))
+    np.testing.assert_allclose(got, ref, **TOL)
+
+
+# --------------------------------------------------------------------- #
+# mesh paths (multidevice CI: XLA_FLAGS=--xla_force_host_platform_
+# device_count=8; skipped on a single-device tier-1 run)
+# --------------------------------------------------------------------- #
+needs8 = pytest.mark.skipif(
+    jax.device_count() < 8, reason="needs 8 devices (multidevice CI job)"
+)
+
+
+@needs8
+@settings(max_examples=5, deadline=None)
+@given(
+    rows=st.integers(24, 96),
+    cols=st.integers(16, 64),
+    rs=st.integers(3, 10),
+    cs=st.integers(2, 8),
+    nb_frac=st.floats(0.1, 0.9),
+    sparsity=st.floats(0.0, 0.8),
+    overlap=st.booleans(),
+    seed=st.integers(0, 100_000),
+)
+def test_mesh_spmv_matches_dense(
+    rows, cols, rs, cs, nb_frac, sparsity, overlap, seed
+):
+    from repro.launch.mesh import make_staging_mesh
+
+    v = _structure(rows, cols, rs, cs, nb_frac, sparsity, False, seed)
+    x = _inputs(v, seed=seed)
+    ref = v.to_dense() @ np.asarray(x)
+    val = jnp.asarray(v.val)
+    for shape in [8, (4, 2), (2, 4)]:
+        mesh = make_staging_mesh(shape)
+        kern = stage_spmv(v, mesh=mesh, overlap_gather=overlap)
+        got = np.asarray(jax.device_get(kern(val, x)))
+        np.testing.assert_allclose(got, ref, err_msg=str(shape), **TOL)
+
+
+@needs8
+@settings(max_examples=5, deadline=None)
+@given(
+    rows=st.integers(24, 96),
+    cols=st.integers(16, 64),
+    rs=st.integers(3, 10),
+    cs=st.integers(2, 8),
+    nb_frac=st.floats(0.1, 0.9),
+    sparsity=st.floats(0.0, 0.8),
+    n_cols=st.sampled_from([8, 16]),
+    overlap=st.booleans(),
+    seed=st.integers(0, 100_000),
+)
+def test_mesh2d_spmm_matches_unsharded_and_1d(
+    rows, cols, rs, cs, nb_frac, sparsity, n_cols, overlap, seed
+):
+    """The 2-D (shards x model) SpMM path is differentially checked
+    against BOTH the unsharded staged kernel and the 1-D mesh path."""
+    from repro.launch.mesh import make_staging_mesh
+
+    v = _structure(rows, cols, rs, cs, nb_frac, sparsity, False, seed)
+    X = _inputs(v, n_cols=n_cols, seed=seed)
+    val = jnp.asarray(v.val)
+    ref = np.asarray(stage_spmm(v, n_cols)(val, X))
+    np.testing.assert_allclose(ref, v.to_dense() @ np.asarray(X), **TOL)
+    got1d = np.asarray(
+        jax.device_get(
+            stage_spmm(
+                v, n_cols, mesh=make_staging_mesh(8), overlap_gather=overlap
+            )(val, X)
+        )
+    )
+    np.testing.assert_allclose(got1d, ref, **TOL)
+    for shape in [(4, 2), (2, 4)]:
+        mesh = make_staging_mesh(shape)
+        kern = stage_spmm(v, n_cols, mesh=mesh, overlap_gather=overlap)
+        got2d = np.asarray(jax.device_get(kern(val, X)))
+        np.testing.assert_allclose(got2d, ref, err_msg=str(shape), **TOL)
+        np.testing.assert_allclose(got2d, got1d, err_msg=str(shape), **TOL)

@@ -1,0 +1,135 @@
+"""Golden-fixture regression tests.
+
+Three small serialized structures (banded, arrow, random-block — see
+tests/fixtures/make_fixtures.py) with frozen expected outputs, structure
+hashes, and plan JSON.  A change to the structure-hash function, the VBR
+field layout, the plan schema, or the partitioner's numerical behaviour
+fails HERE loudly — instead of silently orphaning every persisted cache
+entry in the field.  Regenerate intentionally with::
+
+    PYTHONPATH=src python tests/fixtures/make_fixtures.py
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import vbr as vbrlib
+from repro.core.cache import PlanCache, TuningPlan, plan_key
+from repro.core.staging import StagingOptions, clear_cache, stage_spmm, stage_spmv
+from repro.distributed.partition import (
+    load_shard_plan,
+    make_shard_plan,
+    save_shard_plan,
+)
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+NAMES = ["banded", "arrow", "random_block"]
+_STRUCTURE_FIELDS = ("rpntr", "cpntr", "bindx", "bpntrb", "bpntre", "indx")
+
+
+@pytest.fixture(autouse=True)
+def _fresh(monkeypatch, tmp_path):
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path / "cache"))
+    clear_cache()
+    yield
+    clear_cache()
+
+
+def load_fixture(name):
+    with np.load(os.path.join(FIXTURES, f"{name}.npz")) as z:
+        fields = {f: z[f] for f in _STRUCTURE_FIELDS}
+        v = vbrlib.VBR(
+            shape=tuple(int(d) for d in z["shape"]), val=z["val"], **fields
+        )
+        data = {k: z[k] for k in ("x", "X", "y_spmv", "y_spmm")}
+        return v, data, str(z["structure_hash"])
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_structure_hash_is_stable(name):
+    """The persisted-cache key must not drift: a hash change orphans every
+    plan and structure file ever written."""
+    v, _, frozen_hash = load_fixture(name)
+    assert vbrlib.structure_hash(v) == frozen_hash
+
+
+@pytest.mark.parametrize("name", NAMES)
+@pytest.mark.parametrize("backend", ["unrolled", "grouped", "bucketed"])
+def test_golden_spmv_spmm(name, backend):
+    v, data, _ = load_fixture(name)
+    val = jnp.asarray(v.val)
+    got_v = np.asarray(
+        stage_spmv(v, StagingOptions(backend=backend))(val, jnp.asarray(data["x"]))
+    )
+    np.testing.assert_allclose(got_v, data["y_spmv"], atol=3e-5, rtol=3e-5)
+    got_m = np.asarray(
+        stage_spmm(v, data["X"].shape[1], StagingOptions(backend=backend))(
+            val, jnp.asarray(data["X"])
+        )
+    )
+    np.testing.assert_allclose(got_m, data["y_spmm"], atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_golden_sharded_matches_frozen(name):
+    """The partitioner (any strategy) must still reproduce the frozen
+    outputs through the sharded host path."""
+    v, data, _ = load_fixture(name)
+    for strategy in ("lpt", "contiguous"):
+        got = np.asarray(
+            stage_spmv(v, shards=4, shard_strategy=strategy)(
+                jnp.asarray(v.val), jnp.asarray(data["x"])
+            )
+        )
+        np.testing.assert_allclose(
+            got, data["y_spmv"], atol=3e-5, rtol=3e-5, err_msg=strategy
+        )
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_plan_json_schema_roundtrip(name):
+    """The frozen plan JSON must parse, round-trip bit-identically, and
+    store/load through PlanCache unchanged — schema drift fails here."""
+    with open(os.path.join(FIXTURES, f"{name}_plan.json")) as f:
+        doc = json.load(f)
+    plan = TuningPlan.from_dict(doc)
+    assert plan.to_dict() == doc
+    cache = PlanCache(os.environ["REPRO_CACHE_DIR"])
+    key = plan_key(plan.kind, plan.structure_hash, plan.device)
+    cache.store_plan(key, plan)
+    back = cache.load_plan(key)
+    assert back is not None and back.to_dict() == doc
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_structure_cache_roundtrip(name):
+    """Fixture structures survive the persistent structure cache and come
+    back under the same (frozen) hash."""
+    v, _, frozen_hash = load_fixture(name)
+    cache = PlanCache(os.environ["REPRO_CACHE_DIR"])
+    cache.store_structure(v)
+    back = cache.load_structure(frozen_hash)
+    assert back is not None
+    for f in _STRUCTURE_FIELDS:
+        np.testing.assert_array_equal(getattr(back, f), getattr(v, f))
+    assert back.shape == v.shape
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_shard_plan_cache_roundtrip(name):
+    """Partition records for the fixtures round-trip the plan cache and
+    rebuild identical shards (spans, gathers, sub-hashes)."""
+    v, _, _ = load_fixture(name)
+    plan = make_shard_plan(v, 4, "lpt")
+    cache = PlanCache(os.environ["REPRO_CACHE_DIR"])
+    save_shard_plan(plan, cache)
+    back = load_shard_plan(v, 4, "lpt", cache)
+    assert back is not None
+    assert back.shard_hashes() == plan.shard_hashes()
+    for a, b in zip(plan.shards, back.shards):
+        assert a.spans == b.spans
+        np.testing.assert_array_equal(a.val_index, b.val_index)
+        np.testing.assert_array_equal(a.row_index, b.row_index)
