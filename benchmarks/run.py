@@ -25,6 +25,7 @@ from . import (
     bench_inspection,
     bench_mesh2d,
     bench_scaling,
+    bench_serving,
     bench_sharded,
     bench_sparsity_sweep,
     bench_spmm,
@@ -44,9 +45,10 @@ SUITES = {
     "autotune": bench_autotune.main,  # ISSUE 1: cold/warm plan cache
     "sharded": bench_sharded.main,  # ISSUE 3: 1/2/4/8-device shard_map
     "mesh2d": bench_mesh2d.main,  # ISSUE 5: (shards x model) factorizations
+    "serving": bench_serving.main,  # ISSUE 6: continuous-batching traffic
 }
 
-SMOKE_SUITES = ("spmv", "sharded", "mesh2d")
+SMOKE_SUITES = ("spmv", "sharded", "mesh2d", "serving")
 
 
 def main() -> None:

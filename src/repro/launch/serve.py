@@ -1,7 +1,15 @@
-"""Serving launcher: batched prefill + decode with a KV cache.
+"""Serving launcher: single-batch generate or continuous batching.
+
+Single-batch (the legacy path — one prefill, lockstep decode)::
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
       --batch 4 --prompt-len 32 --gen 32
+
+Continuous batching (request-level scheduler over the paged KV cache,
+mixed prompt/generation lengths, admission + eviction mid-decode)::
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
+      --continuous --requests 12 --max-batch 4 --gen 32
 """
 from __future__ import annotations
 
@@ -19,6 +27,17 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="request-level continuous batching (paged KV cache)")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="[--continuous] number of mixed-length requests")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="[--continuous] decode lanes")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="[--continuous] KV page size (token positions)")
+    ap.add_argument("--policy", default="fcfs",
+                    choices=("fcfs", "warm_first"),
+                    help="[--continuous] admission policy")
     args = ap.parse_args()
 
     if args.devices:
@@ -27,16 +46,50 @@ def main():
             + os.environ.get("XLA_FLAGS", "")
         )
 
+    import numpy as np
     import jax
-    import jax.numpy as jnp
+    import jax.numpy as jnp  # noqa: F401  (kept for interactive use)
 
     from ..configs import get_config
-    from ..models.transformer import decode_step, init_cache, init_params, prefill
+    from ..models.transformer import init_params
     from ..serve.engine import ServeEngine
 
     cfg = get_config(args.arch, reduced=args.reduced)
     params = init_params(cfg, jax.random.PRNGKey(0))
     engine = ServeEngine(cfg, params, max_len=args.prompt_len + args.gen)
+    if engine.warmup_stats["plans_staged"]:
+        print(f"staged {engine.warmup_stats['plans_staged']} sparse plans "
+              "(cold cache); restart to serve warm")
+
+    if args.continuous:
+        rng = np.random.default_rng(1)
+        reqs = []
+        for i in range(args.requests):
+            P = int(rng.integers(max(args.prompt_len // 4, 1),
+                                 args.prompt_len + 1))
+            G = int(rng.integers(max(args.gen // 4, 1), args.gen + 1))
+            reqs.append({
+                "prompt": rng.integers(0, cfg.vocab_size, size=(P,)).astype(
+                    np.int32),
+                "max_new_tokens": G,
+                "temperature": args.temperature,
+                "rng": jax.random.PRNGKey(i),
+                "rid": f"req{i}",
+            })
+        t0 = time.perf_counter()
+        results, sched = engine.serve(
+            reqs, page_size=args.page_size, max_batch=args.max_batch,
+            policy=args.policy,
+        )
+        dt = time.perf_counter() - t0
+        s = sched.stats
+        print(f"served {s['finished']} requests in {dt:.2f}s: "
+              f"{s['steps']} steps, {s['decode_tokens']} decode tokens "
+              f"({s['decode_tokens'] / max(dt, 1e-9):.1f} tok/s), "
+              f"{s['evictions']} evictions, {s['resumes']} resumes")
+        first = results["req0"]
+        print("first request:", first["tokens"][: first["prompt_len"] + 8].tolist())
+        return
 
     rng = jax.random.PRNGKey(1)
     prompts = jax.random.randint(

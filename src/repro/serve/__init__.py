@@ -1,1 +1,3 @@
 from .engine import ServeEngine
+from .paged_cache import PageAllocator, PagedKVCache
+from .scheduler import ContinuousBatchingScheduler, Request

@@ -1,10 +1,26 @@
-"""Batched serving engine: prefill once, decode step-by-step.
+"""Serving engine: a thin facade over the continuous-batching scheduler.
 
-Serving counterpart of TrainLoop: jitted prefill + decode steps with a
-preallocated cache (decode capacity ``max_len``), greedy or temperature
-sampling, continuous stats.  On the production mesh the same engine runs
-under the serve shardings from ``distributed.sharding`` (see
-launch/dryrun.py for the lowering).
+Request-level serving lives in ``serve/scheduler.py`` (continuous
+batching over the paged KV cache in ``serve/paged_cache.py``); the engine
+owns the model (cfg, params, mesh) and the plan warmup, and hands both to
+schedulers it creates:
+
+  engine = ServeEngine(cfg, params, max_len=96)
+  results, sched = engine.serve(
+      [{"prompt": p1, "max_new_tokens": 16},
+       {"prompt": p2, "max_new_tokens": 32, "temperature": 0.8}])
+
+``generate()`` is the original single-batch API, kept as a compatibility
+shim (prefill once + lockstep decode on one preallocated dense cache);
+its numerics are the reference the scheduler path is regression-pinned
+against — N concurrent scheduler requests decode token-identically to N
+independent ``generate`` calls.
+
+Startup warmup resolves sparse-matmul plans BEFORE any jit trace and is
+restart-aware: when the persistent plan cache (core/cache.py) already
+holds every plan for the active device (and per-shard keys for ``mesh=``),
+the warmup only loads them — zero re-staging, zero re-benchmarks —
+reported in ``warmup_stats``.
 """
 from __future__ import annotations
 
@@ -38,6 +54,32 @@ def _has_sparse_ffn(params, patterns) -> bool:
     return False
 
 
+def _pattern_plan_keys(pattern, mesh) -> list:
+    """Every plan-cache key a deployment of ``pattern`` on this device
+    touches: the base key plus per-shard keys when ``mesh`` has a shard
+    axis (the scheduler checks the same set at admission)."""
+    from ..core import cache as cachelib
+    from ..sparse.linear import pattern_hash
+
+    device = jax.default_backend()
+    h = pattern_hash(pattern)
+    keys = [cachelib.plan_key("linear", h, device)]
+    if mesh is not None:
+        from ..core.sharded import resolve_shard_axis
+
+        try:
+            axis = resolve_shard_axis(mesh, "shards")
+        except ValueError:
+            axis = None
+        if axis is not None:
+            n = int(mesh.shape[axis])
+            keys += [
+                cachelib.plan_key("linear", h, device, shard_id=i, num_shards=n)
+                for i in range(n)
+            ]
+    return keys
+
+
 class ServeEngine:
     def __init__(
         self,
@@ -54,6 +96,8 @@ class ServeEngine:
         self.enc_len = enc_len
         self.mesh = mesh
         self.sparse_plans = {}
+        self.patterns = ()
+        self.warmup_stats = {"warm_start": True, "plans_staged": 0}
         if autotune_sparse and getattr(cfg, "sable", None) is not None:
             # Resolve sparse-matmul strategies BEFORE jit traces the model:
             # choose_matmul_strategy inside a trace can only fall back to the
@@ -63,12 +107,31 @@ class ServeEngine:
             # plans are warmed too, so a sharded deployment restarts with
             # zero re-benchmarks; a mesh with no shard axis (pure TP/DP)
             # warms the base plans only.
+            from ..core import cache as cachelib
             from ..models.layers import sable_patterns
             from ..sparse.linear import warm_matmul_plans
 
             pats = sable_patterns(cfg)
             if _has_sparse_ffn(params, pats):
-                self.sparse_plans = warm_matmul_plans(pats.values(), mesh=mesh)
+                self.patterns = tuple(pats.values())
+                store = cachelib.default_cache()
+                warm_start = all(
+                    store.has_plan(k)
+                    for p in self.patterns
+                    for k in _pattern_plan_keys(p, mesh)
+                )
+                before = store.stats()["plans"]
+                # warm-start restarts LOAD every plan (no measuring, no
+                # re-staging — the restart-skips-work contract); a cold
+                # start measures once and persists for the next process
+                self.sparse_plans = warm_matmul_plans(
+                    self.patterns, mesh=mesh
+                )
+                self.warmup_stats = {
+                    "warm_start": warm_start,
+                    "plans_staged": store.stats()["plans"] - before,
+                }
+                assert not warm_start or self.warmup_stats["plans_staged"] == 0
 
         @jax.jit
         def _prefill(params, tokens, cache, enc_out):
@@ -86,6 +149,35 @@ class ServeEngine:
         self._prefill = _prefill
         self._decode = _decode
 
+    # ------------------------------------------------------------------ #
+    # request-level serving (continuous batching over the paged cache)
+    # ------------------------------------------------------------------ #
+    def make_scheduler(self, *, max_len: Optional[int] = None, **kw):
+        """A ContinuousBatchingScheduler sharing this engine's model and
+        mesh.  kwargs pass through (page_size, num_pages, max_batch,
+        policy, clock, plan_cache, record_logits, ...)."""
+        from .scheduler import ContinuousBatchingScheduler
+
+        return ContinuousBatchingScheduler(
+            self.cfg,
+            self.params,
+            max_len=self.max_len if max_len is None else max_len,
+            mesh=self.mesh,
+            **kw,
+        )
+
+    def serve(self, requests, *, max_steps: int = 100_000, **kw):
+        """Submit ``requests`` (dicts of ``submit`` kwargs) and run the
+        scheduler to completion.  Returns ``(results, scheduler)`` where
+        results maps rid -> {tokens, prompt_len, metrics, state}."""
+        sched = self.make_scheduler(**kw)
+        for r in requests:
+            sched.submit(**r)
+        return sched.run(max_steps=max_steps), sched
+
+    # ------------------------------------------------------------------ #
+    # single-batch compatibility shim (the numeric reference path)
+    # ------------------------------------------------------------------ #
     def generate(
         self,
         prompts: jnp.ndarray,  # (B, P) int32

@@ -1,0 +1,395 @@
+"""Paged/blocked KV cache: a free-list page allocator over one shared arena.
+
+The single-sequence engine preallocates a dense ``(B, max_len, ...)`` cache
+per batch — fine for one request, wasteful for a server where prompt and
+generation lengths are heterogeneous.  Here every attention cache leaf is
+backed by ONE arena of fixed-size pages (``page_size`` token positions
+each); a sequence owns ``ceil(len / page_size)`` pages through a per-
+sequence page table and grows one page at a time mid-decode.  Pages are
+recycled through a FIFO free list, so N concurrent requests share the
+arena without per-request preallocation.
+
+Leaf classification is structural, not name-based: two cache templates are
+built with different ``s_max`` and every leaf whose shape changes carries a
+sequence axis (GQA/MLA k/v) and is paged; shape-stable leaves (Mamba conv/
+ssm state, cross-attention KV) are per-sequence *state* and stored whole.
+This keeps the cache format-agnostic — a new mixer with a sequence axis is
+paged automatically.
+
+Arenas are host (numpy) arrays: the scheduler gathers the active lanes
+into a dense ``(repeat, B, S_view, ...)`` batch view per decode step (the
+page-table indirection happens here, outside the jitted step) and scatters
+each lane's newly written position back afterwards.  Page id
+``num_pages`` is a reserved always-zero page used to pad the view for
+lanes that have not allocated that far yet, so a gathered view is
+bit-identical to the dense reference cache over every written position
+and zero beyond it.
+
+Eviction parks a sequence's pages + state on the host (``evict``) and
+frees the pages; ``resume`` reallocates and restores bit-for-bit, so a
+preempted sequence continues decoding losslessly.
+"""
+from __future__ import annotations
+
+import collections
+import math
+from typing import Dict, List, Optional
+
+import numpy as np
+import jax
+
+from ..models.config import ModelConfig
+from ..models.transformer import init_cache
+
+__all__ = ["PageAllocator", "PagedKVCache"]
+
+
+class PageAllocator:
+    """FIFO free-list page allocator.  Deterministic: pages are handed out
+    in ascending id order initially and recycled in free order, so a fixed
+    request sequence always produces the same page tables (the golden
+    serving fixture freezes exactly this)."""
+
+    def __init__(self, num_pages: int):
+        if num_pages < 1:
+            raise ValueError("need at least one page")
+        self.num_pages = int(num_pages)
+        self._free = collections.deque(range(self.num_pages))
+        self._held: set = set()
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_held(self) -> int:
+        return len(self._held)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Allocate ``n`` pages atomically; None (state unchanged) if the
+        free list is short."""
+        if n < 0:
+            raise ValueError("negative allocation")
+        if n > len(self._free):
+            return None
+        pages = [self._free.popleft() for _ in range(n)]
+        self._held.update(pages)
+        return pages
+
+    def free(self, pages) -> None:
+        for p in pages:
+            if p not in self._held:
+                raise ValueError(f"double free / foreign page {p}")
+            self._held.discard(p)
+            self._free.append(p)
+
+    def check(self) -> None:
+        """Invariant: every page is exactly once free or held."""
+        assert len(self._free) + len(self._held) == self.num_pages
+        assert set(self._free) | self._held == set(range(self.num_pages))
+        assert not (set(self._free) & self._held)
+
+
+def _flatten(tree):
+    return jax.tree_util.tree_flatten(tree)
+
+
+class PagedKVCache:
+    """Model-shaped paged cache arena (see module docstring).
+
+    Parameters
+    ----------
+    cfg : ModelConfig (decoder-only; enc-dec goes through the legacy path)
+    num_pages : total allocatable pages shared by all sequences
+    page_size : token positions per page
+    max_len : per-sequence logical capacity; the dense batch view is
+        ``view_pages * page_size`` wide with ``view_pages =
+        ceil(max_len / page_size)``
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        num_pages: int,
+        page_size: int,
+        max_len: int,
+        dtype=None,
+    ):
+        if cfg.is_encdec:
+            raise ValueError(
+                "PagedKVCache is decoder-only; enc-dec serving uses the "
+                "single-sequence compatibility path"
+            )
+        self.cfg = cfg
+        self.page_size = int(page_size)
+        self.max_len = int(max_len)
+        self.view_pages = math.ceil(self.max_len / self.page_size)
+        if num_pages < self.view_pages:
+            raise ValueError(
+                f"num_pages={num_pages} cannot hold even one max_len="
+                f"{max_len} sequence ({self.view_pages} pages needed)"
+            )
+        self.allocator = PageAllocator(num_pages)
+        self.zero_page = num_pages  # reserved, always zero, never allocated
+
+        # structural classification: leaves whose shape varies with s_max
+        # carry the sequence axis (paged); the rest are per-seq state
+        ta, _ = _flatten(init_cache(cfg, 1, 2, dtype=dtype))
+        tb, self.treedef = _flatten(init_cache(cfg, 1, 3, dtype=dtype))
+        self.num_leaves = len(tb)
+        self.paged: List[bool] = []
+        self.seq_axis: List[Optional[int]] = []
+        self._arenas: List[Optional[np.ndarray]] = []
+        self._state_shape: List[Optional[tuple]] = []
+        self._dtypes = []
+        for la, lb in zip(ta, tb):
+            self._dtypes.append(np.dtype(lb.dtype))
+            if la.shape != lb.shape:
+                diffs = [
+                    i for i, (x, y) in enumerate(zip(la.shape, lb.shape)) if x != y
+                ]
+                assert diffs == [2], (
+                    f"expected a single seq axis at 2, got {diffs} for "
+                    f"{la.shape} vs {lb.shape}"
+                )
+                self.paged.append(True)
+                self.seq_axis.append(2)
+                feat = tuple(lb.shape[3:])
+                repeat = lb.shape[0]
+                self._arenas.append(
+                    np.zeros(
+                        (num_pages + 1, repeat, self.page_size) + feat,
+                        np.dtype(lb.dtype),
+                    )
+                )
+                self._state_shape.append(None)
+            else:
+                self.paged.append(False)
+                self.seq_axis.append(None)
+                self._arenas.append(None)
+                self._state_shape.append(tuple(lb.shape))
+
+        # per-sequence bookkeeping
+        self.page_table: Dict[str, List[int]] = {}
+        self.seq_len: Dict[str, int] = {}
+        self._state: Dict[str, List[Optional[np.ndarray]]] = {}
+        self._parked: Dict[str, dict] = {}
+
+    # ------------------------------------------------------------------ #
+    # mask pytree for the lane decoder (True = leaf has a sequence axis)
+    # ------------------------------------------------------------------ #
+    @property
+    def paged_mask(self):
+        return jax.tree_util.tree_unflatten(self.treedef, list(self.paged))
+
+    # ------------------------------------------------------------------ #
+    # allocation
+    # ------------------------------------------------------------------ #
+    def pages_needed(self, n_tokens: int) -> int:
+        return max(1, math.ceil(n_tokens / self.page_size))
+
+    def can_alloc(self, n_tokens: int) -> bool:
+        return self.allocator.num_free >= self.pages_needed(n_tokens)
+
+    def alloc_seq(self, rid: str, n_tokens: int) -> bool:
+        """Reserve pages for ``n_tokens`` positions and zero-init state.
+        False (nothing changes) if the free list is short."""
+        if rid in self.page_table:
+            raise ValueError(f"sequence {rid!r} already allocated")
+        if n_tokens > self.max_len:
+            raise ValueError(f"{n_tokens} tokens > max_len={self.max_len}")
+        pages = self.allocator.alloc(self.pages_needed(n_tokens))
+        if pages is None:
+            return False
+        for p in pages:
+            self._zero_page(p)
+        self.page_table[rid] = pages
+        self.seq_len[rid] = 0
+        self._state[rid] = [
+            None if s is None else np.zeros(s, self._dtypes[i])
+            for i, s in enumerate(self._state_shape)
+        ]
+        return True
+
+    def ensure_capacity(self, rid: str, n_tokens: int) -> bool:
+        """Grow the page table to cover ``n_tokens`` positions."""
+        need = self.pages_needed(n_tokens) - len(self.page_table[rid])
+        if need <= 0:
+            return True
+        pages = self.allocator.alloc(need)
+        if pages is None:
+            return False
+        for p in pages:
+            self._zero_page(p)
+        self.page_table[rid].extend(pages)
+        return True
+
+    def free_seq(self, rid: str) -> None:
+        self.allocator.free(self.page_table.pop(rid))
+        self.seq_len.pop(rid, None)
+        self._state.pop(rid, None)
+
+    def _zero_page(self, page: int) -> None:
+        # recycled pages may hold a dead sequence's KV; zeroing keeps every
+        # gathered view bit-identical to the dense reference cache
+        for a in self._arenas:
+            if a is not None:
+                a[page] = 0
+
+    # ------------------------------------------------------------------ #
+    # writes
+    # ------------------------------------------------------------------ #
+    def write_prefill(self, rid: str, cache, length: int) -> None:
+        """Copy a dense single-sequence cache (leaves ``(repeat, 1, S, ...)``
+        with ``S >= length``) into this sequence's pages + state."""
+        if not self.ensure_capacity(rid, length):
+            raise RuntimeError(f"no pages for prefill of {rid!r}")
+        leaves, _ = _flatten(cache)
+        assert len(leaves) == self.num_leaves
+        pt = self.page_table[rid]
+        ps = self.page_size
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(leaf)
+            if self.paged[i]:
+                for j in range(self.pages_needed(length)):
+                    w = min(ps, length - j * ps)
+                    if w <= 0:
+                        break
+                    self._arenas[i][pt[j], :, :w] = arr[:, 0, j * ps : j * ps + w]
+            else:
+                self._state[rid][i] = arr.copy()
+        self.seq_len[rid] = length
+
+    def append_token(self, rid: str, slices, position: int) -> None:
+        """Write one decode step's output for one lane: ``slices`` is a
+        flat leaf list — paged leaves ``(repeat, ...feat)`` (the KV written
+        at ``position``, batch/seq axes squeezed), state leaves
+        ``(repeat, 1, ...)`` replace the stored state wholesale."""
+        if not self.ensure_capacity(rid, position + 1):
+            raise RuntimeError(f"no pages to append to {rid!r}")
+        page = self.page_table[rid][position // self.page_size]
+        off = position % self.page_size
+        for i, leaf in enumerate(slices):
+            arr = np.asarray(leaf)
+            if self.paged[i]:
+                self._arenas[i][page, :, off] = arr
+            else:
+                self._state[rid][i] = arr.copy()
+        self.seq_len[rid] = max(self.seq_len[rid], position + 1)
+
+    # ------------------------------------------------------------------ #
+    # reads
+    # ------------------------------------------------------------------ #
+    def _full_table(self, rid: Optional[str]) -> List[int]:
+        pt = [] if rid is None else self.page_table[rid]
+        return list(pt) + [self.zero_page] * (self.view_pages - len(pt))
+
+    def gather(self, rids: List[Optional[str]]):
+        """Materialize the dense batch view for a list of lanes (None =
+        empty lane, all zeros).  Leaves come back shaped like
+        ``init_cache(cfg, B, view_pages * page_size)``."""
+        B = len(rids)
+        tables = np.asarray([self._full_table(r) for r in rids], np.int64)
+        leaves = []
+        for i in range(self.num_leaves):
+            if self.paged[i]:
+                a = self._arenas[i][tables]  # (B, VP, repeat, ps, ...feat)
+                a = np.moveaxis(a, 2, 0)  # (repeat, B, VP, ps, ...)
+                leaves.append(
+                    a.reshape(a.shape[:2] + (-1,) + a.shape[4:])
+                )
+            else:
+                zero = np.zeros(self._state_shape[i], self._dtypes[i])
+                leaves.append(
+                    np.concatenate(
+                        [
+                            (zero if r is None else self._state[r][i])
+                            for r in rids
+                        ],
+                        axis=1,
+                    )
+                    if B
+                    else zero
+                )
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    def read_dense(self, rid: str, s_max: Optional[int] = None):
+        """Dense single-sequence cache for ``rid`` — shaped like
+        ``init_cache(cfg, 1, s_max)`` with every written position equal to
+        the page contents bit-for-bit (the property-test contract)."""
+        length = self.seq_len[rid]
+        s_max = length if s_max is None else s_max
+        if s_max < length:
+            raise ValueError("s_max shorter than written length")
+        ps = self.page_size
+        leaves = []
+        for i in range(self.num_leaves):
+            if self.paged[i]:
+                a = self._arenas[i]
+                repeat, feat = a.shape[1], a.shape[3:]
+                out = np.zeros(
+                    (repeat, 1, s_max) + feat, self._dtypes[i]
+                )
+                for j, page in enumerate(self.page_table[rid]):
+                    w = min(ps, length - j * ps)
+                    if w <= 0:
+                        break
+                    out[:, 0, j * ps : j * ps + w] = a[page, :, :w]
+                leaves.append(out)
+            else:
+                leaves.append(self._state[rid][i].copy())
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    # ------------------------------------------------------------------ #
+    # eviction / resume (lossless preemption)
+    # ------------------------------------------------------------------ #
+    def evict(self, rid: str) -> None:
+        """Park ``rid``'s pages + state on the host and free the pages."""
+        length = self.seq_len[rid]
+        pt = self.page_table[rid]
+        parked_pages = [
+            None
+            if a is None
+            else a[pt].copy()  # (n_pages, repeat, ps, ...feat)
+            for a in self._arenas
+        ]
+        self._parked[rid] = {
+            "pages": parked_pages,
+            "n_pages": len(pt),
+            "state": [
+                None if s is None else s.copy() for s in self._state[rid]
+            ],
+            "seq_len": length,
+        }
+        self.free_seq(rid)
+
+    def resume(self, rid: str) -> bool:
+        """Reallocate pages for a parked sequence and restore its contents
+        bit-for-bit.  False (still parked) if pages are short."""
+        park = self._parked[rid]
+        pages = self.allocator.alloc(park["n_pages"])
+        if pages is None:
+            return False
+        for i, blob in enumerate(park["pages"]):
+            if blob is not None:
+                self._arenas[i][pages] = blob
+        self.page_table[rid] = pages
+        self.seq_len[rid] = park["seq_len"]
+        self._state[rid] = park["state"]
+        del self._parked[rid]
+        return True
+
+    def is_parked(self, rid: str) -> bool:
+        return rid in self._parked
+
+    # ------------------------------------------------------------------ #
+    def stats(self) -> dict:
+        return {
+            "num_pages": self.allocator.num_pages,
+            "free_pages": self.allocator.num_free,
+            "held_pages": self.allocator.num_held,
+            "page_size": self.page_size,
+            "view_pages": self.view_pages,
+            "sequences": len(self.page_table),
+            "parked": len(self._parked),
+        }

@@ -1,0 +1,495 @@
+"""Continuous-batching request scheduler over the paged KV cache.
+
+The paper's amortization thesis at request granularity: a server admits and
+retires sequences *mid-decode* (continuous batching) instead of running
+fixed generate() batches, and every admission consults the persistent plan
+cache (core/cache.py) so a structure whose plan is already warm fast-paths
+straight to decode while cold structures are staged off the decode path
+(at most ``cold_stage_budget`` patterns per scheduler iteration).
+
+Scheduler states::
+
+    WAITING ──admit (pages + lane free)──▶ RUNNING ──len(tokens)==max──▶ FINISHED
+       ▲                                     │
+       └──────── resume (lossless) ◀── PREEMPTED (pages parked on host)
+
+One ``step()`` is one deterministic scheduling iteration: (0) stage cold
+plans, (1) admit/resume from the queue, (2) grow page tables for this
+step's write position — evicting the youngest-arrival lane on page
+pressure — (3) one batched decode step over all running lanes, (4) retire
+finished sequences.  Determinism is total given a fixed submission order
+and clock: tests drive it with a fake clock and golden transcripts freeze
+the admit/evict/page-table sequence.
+
+Decode is a single jitted ``vmap`` over lanes — each lane carries its own
+cache view, position, RNG key, and temperature, so a lane's computation is
+exactly the single-sequence ``decode_step`` and output tokens match N
+independent ``ServeEngine.generate`` runs token-for-token.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.transformer import decode_step, init_cache, prefill
+from .paged_cache import PagedKVCache
+
+__all__ = ["Request", "ContinuousBatchingScheduler"]
+
+WAITING, RUNNING, PREEMPTED, FINISHED = (
+    "WAITING",
+    "RUNNING",
+    "PREEMPTED",
+    "FINISHED",
+)
+
+_RID = itertools.count()
+
+
+@dataclasses.dataclass(eq=False)  # identity semantics (numpy fields)
+class Request:
+    """One generation request.  ``patterns`` (optional BlockPatterns) are
+    the request's sparse structures for plan-warm admission; empty means
+    dense / always warm."""
+
+    prompt: np.ndarray  # (P,) int32
+    max_new_tokens: int
+    temperature: float = 0.0
+    rng: Optional[jnp.ndarray] = None  # per-request PRNG key (sampling)
+    patterns: tuple = ()
+    rid: str = ""
+    arrival: float = 0.0
+    state: str = WAITING
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    logits: list = dataclasses.field(default_factory=list)
+    skips: int = 0  # times passed over by warm-first admission (aging)
+    metrics: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+    def output(self) -> np.ndarray:
+        return np.concatenate(
+            [np.asarray(self.prompt, np.int32), np.asarray(self.tokens, np.int32)]
+        )
+
+
+def _make_lane_step(cfg: ModelConfig, paged_mask):
+    """Jitted per-step decoder: vmap of the single-sequence decode over
+    lanes with per-lane (cache view, position, key, temperature).  Returns
+    (next_token (B,), logits (B, V) f32, written-slice pytree)."""
+
+    def one(params, tok, cache_b, pos, rng, temp):
+        cache1 = jax.tree.map(lambda a: a[:, None], cache_b)  # re-add B=1
+        logits, nc = decode_step(params, cfg, tok[None], cache1, pos)
+        row = logits[:, 0].astype(jnp.float32)  # (1, V) — engine layout
+        greedy = jnp.argmax(row, axis=-1)
+        sampled = jax.random.categorical(
+            rng, row / jnp.maximum(temp, 1e-6)
+        )
+        nxt = jnp.where(temp > 0, sampled, greedy).astype(jnp.int32)
+        sl = jax.tree.map(
+            lambda a, m: (
+                jax.lax.dynamic_slice_in_dim(a, pos, 1, axis=2)[:, 0, 0]
+                if m
+                else a
+            ),
+            nc,
+            paged_mask,
+        )
+        return nxt[0], row[0], sl
+
+    return jax.jit(jax.vmap(one, in_axes=(None, 0, 1, 0, 0, 0)))
+
+
+class ContinuousBatchingScheduler:
+    """See module docstring.  ``policy``: "fcfs" (strict arrival order) or
+    "warm_first" (plan-warm requests admit ahead of cold ones, with aging:
+    a request skipped ``max_skips`` times regains head-of-line priority, so
+    cold requests cannot starve)."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        max_len: int,
+        page_size: int = 16,
+        num_pages: Optional[int] = None,
+        max_batch: int = 4,
+        policy: str = "fcfs",
+        cold_stage_budget: int = 1,
+        max_skips: int = 4,
+        clock=None,
+        mesh=None,
+        plan_cache=None,
+        record_logits: bool = False,
+    ):
+        if policy not in ("fcfs", "warm_first"):
+            raise ValueError(f"unknown admission policy {policy!r}")
+        self.cfg = cfg
+        self.params = params
+        self.max_len = int(max_len)
+        self.max_batch = int(max_batch)
+        self.policy = policy
+        self.cold_stage_budget = int(cold_stage_budget)
+        self.max_skips = int(max_skips)
+        self.clock = clock if clock is not None else time.perf_counter
+        self.mesh = mesh
+        self.plan_cache = plan_cache
+        self.record_logits = record_logits
+
+        import math
+
+        view_pages = math.ceil(self.max_len / page_size)
+        if num_pages is None:
+            num_pages = self.max_batch * view_pages
+        self.kv = PagedKVCache(cfg, num_pages, page_size, self.max_len)
+
+        self._prefill = jax.jit(
+            lambda params, toks, cache: prefill(params, cfg, toks, cache)
+        )
+        self._lane_step = _make_lane_step(cfg, self.kv.paged_mask)
+
+        self.queue: List[Request] = []  # kept in arrival order
+        self.lanes: List[Optional[Request]] = [None] * self.max_batch
+        self.requests: dict = {}
+        self.transcript: list = []
+        self.stats = {
+            "steps": 0,
+            "admissions": 0,
+            "evictions": 0,
+            "resumes": 0,
+            "finished": 0,
+            "plans_staged": 0,
+            "decode_tokens": 0,
+        }
+
+    # ------------------------------------------------------------------ #
+    # submission
+    # ------------------------------------------------------------------ #
+    def submit(
+        self,
+        prompt,
+        max_new_tokens: int,
+        temperature: float = 0.0,
+        rng=None,
+        patterns=(),
+        rid: Optional[str] = None,
+        arrival: Optional[float] = None,
+    ) -> str:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) + max_new_tokens - 1 > self.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + gen ({max_new_tokens}) exceeds "
+                f"max_len={self.max_len}"
+            )
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        req = Request(
+            prompt=prompt,
+            max_new_tokens=int(max_new_tokens),
+            temperature=float(temperature),
+            rng=rng if rng is not None else jax.random.PRNGKey(0),
+            patterns=tuple(patterns),
+            rid=rid if rid is not None else f"req{next(_RID)}",
+            arrival=self.clock() if arrival is None else float(arrival),
+        )
+        if req.rid in self.requests:
+            raise ValueError(f"duplicate rid {req.rid!r}")
+        self.requests[req.rid] = req
+        # arrival-ordered insert (preempted re-entries use the same path)
+        self._enqueue(req)
+        return req.rid
+
+    def _enqueue(self, req: Request) -> None:
+        i = len(self.queue)
+        while i > 0 and self.queue[i - 1].arrival > req.arrival:
+            i -= 1
+        self.queue.insert(i, req)
+
+    # ------------------------------------------------------------------ #
+    # plan-warm admission
+    # ------------------------------------------------------------------ #
+    def _plan_keys(self, pattern) -> List[str]:
+        from ..core import cache as cachelib
+        from ..sparse.linear import pattern_hash
+
+        device = jax.default_backend()
+        h = pattern_hash(pattern)
+        keys = [cachelib.plan_key("linear", h, device)]
+        if self.mesh is not None:
+            from ..core.sharded import resolve_shard_axis
+
+            try:
+                axis = resolve_shard_axis(self.mesh, "shards")
+            except ValueError:
+                axis = None
+            if axis is not None:
+                n = int(self.mesh.shape[axis])
+                keys += [
+                    cachelib.plan_key(
+                        "linear", h, device, shard_id=i, num_shards=n
+                    )
+                    for i in range(n)
+                ]
+        return keys
+
+    def _store(self):
+        from ..core import cache as cachelib
+
+        return (
+            self.plan_cache
+            if self.plan_cache is not None
+            else cachelib.default_cache()
+        )
+
+    def _is_warm(self, req: Request) -> bool:
+        store = self._store()
+        return all(
+            store.has_plan(k)
+            for p in req.patterns
+            for k in self._plan_keys(p)
+        )
+
+    def _stage_cold(self, ev: dict) -> None:
+        """Stage up to ``cold_stage_budget`` cold patterns from the queue —
+        off the decode path (decode proceeds this same iteration)."""
+        if self.cold_stage_budget <= 0:
+            return
+        from ..sparse.linear import pattern_hash, warm_matmul_plans
+
+        store = self._store()
+        budget = self.cold_stage_budget
+        seen = set()
+        # waiting requests first, then running lanes: admission may outrun
+        # staging (fcfs admits cold requests too), but every submitted
+        # pattern must end up staged so the next process restarts warm
+        pool = list(self.queue) + [r for r in self.lanes if r is not None]
+        for req in pool:
+            for p in req.patterns:
+                h = pattern_hash(p)
+                if h in seen:
+                    continue
+                seen.add(h)
+                keys = self._plan_keys(p)
+                cold = [k for k in keys if not store.has_plan(k)]
+                if not cold:
+                    continue
+                warm_matmul_plans([p], cache=self.plan_cache, mesh=self.mesh)
+                staged = sum(1 for k in cold if store.has_plan(k))
+                self.stats["plans_staged"] += staged
+                ev["staged"].append(h)
+                budget -= 1
+                if budget <= 0:
+                    return
+
+    # ------------------------------------------------------------------ #
+    # admission / eviction
+    # ------------------------------------------------------------------ #
+    def _pick_next(self) -> Optional[int]:
+        if not self.queue:
+            return None
+        if self.policy == "fcfs":
+            return 0
+        # warm_first with aging: an over-skipped head wins unconditionally
+        if self.queue[0].skips >= self.max_skips:
+            return 0
+        for i, r in enumerate(self.queue):
+            if self._is_warm(r):
+                for o in self.queue[:i]:
+                    o.skips += 1
+                return i
+        return 0
+
+    def _admit(self, now: float, ev: dict) -> None:
+        while True:
+            free = [i for i, r in enumerate(self.lanes) if r is None]
+            if not free or not self.queue:
+                return
+            qi = self._pick_next()
+            if qi is None:
+                return
+            req = self.queue[qi]
+            if req.state == PREEMPTED:
+                if not self.kv.resume(req.rid):
+                    return  # head-of-line blocking on pages: deterministic
+                self.stats["resumes"] += 1
+                ev["resumed"].append(req.rid)
+            else:
+                if not self.kv.alloc_seq(req.rid, req.prompt_len):
+                    return
+                self._prefill_request(req, now)
+                ev["admitted"].append(req.rid)
+            self.queue.pop(qi)
+            req.state = RUNNING
+            self.stats["admissions"] += 1
+            req.metrics.setdefault("admitted_at", now)
+            if len(req.tokens) >= req.max_new_tokens:
+                self._finish(req, free[0], now, ev, lane_assigned=False)
+            else:
+                self.lanes[free[0]] = req
+
+    def _prefill_request(self, req: Request, now: float) -> None:
+        P = req.prompt_len
+        cache = init_cache(self.cfg, 1, P)
+        logits, cache = self._prefill(
+            self.params, jnp.asarray(req.prompt[None]), cache
+        )
+        row = logits[:, -1].astype(jnp.float32)  # (1, V)
+        first = int(jnp.argmax(row, axis=-1)[0])
+        self.kv.write_prefill(req.rid, cache, P)
+        req.tokens.append(first)
+        if self.record_logits:
+            req.logits.append(np.asarray(row[0]))
+        req.metrics.setdefault("first_token_at", now)
+
+    def _evict(self, req: Request, ev: dict) -> None:
+        lane = self.lanes.index(req)
+        self.kv.evict(req.rid)
+        self.lanes[lane] = None
+        req.state = PREEMPTED
+        self.stats["evictions"] += 1
+        ev["evicted"].append(req.rid)
+        self._enqueue(req)
+
+    def _ensure_growth(self, ev: dict) -> List[int]:
+        """Reserve this step's write position for every running lane,
+        evicting the youngest-arrival lane under page pressure.  Returns
+        the lane indices that will decode this step."""
+        order = sorted(
+            (i for i, r in enumerate(self.lanes) if r is not None),
+            key=lambda i: (self.lanes[i].arrival, self.lanes[i].rid),
+        )
+        for i in list(order):
+            req = self.lanes[i]
+            if req is None:
+                continue
+            # this step consumes tokens[-1], writing its KV at position
+            # prompt_len + len(tokens) - 1 — reserve exactly that
+            while not self.kv.ensure_capacity(
+                req.rid, req.prompt_len + len(req.tokens)
+            ):
+                running = [r for r in self.lanes if r is not None]
+                victim = max(running, key=lambda r: (r.arrival, r.rid))
+                self._evict(victim, ev)
+                if victim is req:
+                    break
+        return [i for i, r in enumerate(self.lanes) if r is not None]
+
+    def _finish(self, req, lane, now, ev, lane_assigned=True) -> None:
+        self.kv.free_seq(req.rid)
+        if lane_assigned:
+            self.lanes[lane] = None
+        req.state = FINISHED
+        req.metrics["finished_at"] = now
+        self.stats["finished"] += 1
+        ev["finished"].append(req.rid)
+
+    # ------------------------------------------------------------------ #
+    # the scheduling iteration
+    # ------------------------------------------------------------------ #
+    def step(self) -> dict:
+        now = self.clock()
+        ev = {
+            "step": self.stats["steps"],
+            "admitted": [],
+            "resumed": [],
+            "evicted": [],
+            "finished": [],
+            "staged": [],
+            "running": [],
+            "page_tables": {},
+        }
+        self._stage_cold(ev)
+        self._admit(now, ev)
+        active = self._ensure_growth(ev)
+        ev["running"] = [self.lanes[i].rid for i in active]
+        ev["page_tables"] = {
+            self.lanes[i].rid: list(self.kv.page_table[self.lanes[i].rid])
+            for i in active
+        }
+        if active:
+            self._decode_once(active, ev)
+        self.stats["steps"] += 1
+        self.transcript.append(ev)
+        return ev
+
+    def _decode_once(self, active: List[int], ev: dict) -> None:
+        B = self.max_batch
+        toks = np.zeros((B, 1), np.int32)
+        pos = np.zeros((B,), np.int32)
+        temps = np.zeros((B,), np.float32)
+        keys = []
+        zero_key = np.zeros_like(np.asarray(jax.random.PRNGKey(0)))
+        active_set = set(active)
+        for i in range(B):
+            req = self.lanes[i] if i in active_set else None
+            if req is None:
+                keys.append(zero_key)
+                continue
+            toks[i, 0] = req.tokens[-1]
+            pos[i] = req.prompt_len + len(req.tokens) - 1
+            temps[i] = req.temperature
+            # mirror ServeEngine.generate: split every step, sample with sub
+            req.rng, sub = jax.random.split(req.rng)
+            keys.append(np.asarray(sub))
+        view = self.kv.gather(
+            [self.lanes[i].rid if self.lanes[i] is not None else None
+             for i in range(B)]
+        )
+        nxt, logits, slices = self._lane_step(
+            self.params,
+            jnp.asarray(toks),
+            view,
+            jnp.asarray(pos),
+            jnp.asarray(np.stack(keys)),
+            jnp.asarray(temps),
+        )
+        nxt = np.asarray(nxt)
+        logits = np.asarray(logits)
+        flat, _ = jax.tree_util.tree_flatten(slices)
+        flat = [np.asarray(leaf) for leaf in flat]
+        now = self.clock()
+        for i in active:
+            req = self.lanes[i]
+            self.kv.append_token(
+                req.rid, [leaf[i] for leaf in flat], int(pos[i])
+            )
+            req.tokens.append(int(nxt[i]))
+            if self.record_logits:
+                req.logits.append(logits[i])
+            self.stats["decode_tokens"] += 1
+            if len(req.tokens) >= req.max_new_tokens:
+                self._finish(req, i, now, ev)
+
+    # ------------------------------------------------------------------ #
+    def pending(self) -> int:
+        return len(self.queue) + sum(r is not None for r in self.lanes)
+
+    def run(self, max_steps: int = 100_000) -> dict:
+        """Drive ``step()`` until every submitted request finished."""
+        while self.pending() and self.stats["steps"] < max_steps:
+            self.step()
+        if self.pending():
+            raise RuntimeError(
+                f"scheduler did not drain in {max_steps} steps "
+                f"(queue={len(self.queue)})"
+            )
+        return {
+            rid: {
+                "tokens": req.output(),
+                "prompt_len": req.prompt_len,
+                "metrics": dict(req.metrics),
+                "state": req.state,
+            }
+            for rid, req in self.requests.items()
+        }

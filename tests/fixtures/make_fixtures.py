@@ -117,6 +117,82 @@ def write_fixture(name: str, v: vbrlib.VBR) -> None:
     )
 
 
+def write_serving_fixture() -> None:
+    """Freeze the paged-cache layout and a 3-request continuous-batching
+    transcript (tests/test_golden.py::test_golden_serving_*).
+
+    Everything frozen here is integer-deterministic — admission order,
+    evictions, page tables depend only on prompt/generation lengths and
+    the FIFO allocator, never on token values — plus the decoded tokens
+    themselves, which regression-pin the batched decode against the
+    single-sequence path."""
+    import itertools
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serve.scheduler import ContinuousBatchingScheduler
+
+    import dataclasses
+
+    cfg = get_config("llama3.2-3b", reduced=True)
+    cfg = dataclasses.replace(
+        cfg, compute_dtype="float32", param_dtype="float32"
+    )
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    sched_args = {
+        "max_len": 16, "page_size": 4, "max_batch": 3, "num_pages": 9
+    }
+    counter = itertools.count()
+    sched = ContinuousBatchingScheduler(
+        cfg, params, clock=lambda: float(next(counter)), **sched_args
+    )
+    rng = np.random.default_rng(77)
+    requests = []
+    for i, (P, G) in enumerate([(6, 8), (6, 8), (6, 8)]):
+        prompt = rng.integers(0, cfg.vocab_size, size=(P,)).astype(np.int32)
+        requests.append(
+            {
+                "rid": f"g{i}",
+                "prompt": [int(t) for t in prompt],
+                "max_new_tokens": G,
+                "arrival": float(i),
+            }
+        )
+        sched.submit(prompt, G, rid=f"g{i}", arrival=float(i))
+    results = sched.run()
+    kv = sched.kv
+    doc = {
+        "config": "llama3.2-3b",
+        "scheduler": sched_args,
+        "paged_cache": {
+            "view_pages": kv.view_pages,
+            "zero_page": kv.zero_page,
+            "num_leaves": kv.num_leaves,
+            "paged": list(kv.paged),
+            "arena_shapes": [
+                None if a is None else list(a.shape) for a in kv._arenas
+            ],
+        },
+        "requests": requests,
+        "transcript": sched.transcript,
+        "stats": {
+            k: sched.stats[k]
+            for k in ("steps", "admissions", "evictions", "resumes", "finished")
+        },
+        "tokens": {
+            rid: [int(t) for t in r["tokens"]] for rid, r in results.items()
+        },
+    }
+    with open(os.path.join(HERE, "serving.json"), "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    print(
+        f"serving: steps={sched.stats['steps']} "
+        f"evictions={sched.stats['evictions']} resumes={sched.stats['resumes']}"
+    )
+
+
 if __name__ == "__main__":
     for name, build in [
         ("banded", banded),
@@ -124,3 +200,4 @@ if __name__ == "__main__":
         ("random_block", random_block),
     ]:
         write_fixture(name, build())
+    write_serving_fixture()

@@ -118,6 +118,92 @@ def test_structure_cache_roundtrip(name):
     assert back.shape == v.shape
 
 
+@pytest.fixture(scope="module")
+def serving_fixture():
+    with open(os.path.join(FIXTURES, "serving.json")) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def serving_replay(serving_fixture):
+    """Replay the frozen 3-request serve under a fake clock once."""
+    import dataclasses
+    import itertools
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serve.engine import ServeEngine
+    from repro.serve.scheduler import ContinuousBatchingScheduler
+
+    doc = serving_fixture
+    cfg = get_config(doc["config"], reduced=True)
+    cfg = dataclasses.replace(
+        cfg, compute_dtype="float32", param_dtype="float32"
+    )
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    counter = itertools.count()
+    sched = ContinuousBatchingScheduler(
+        cfg, params, clock=lambda: float(next(counter)), **doc["scheduler"]
+    )
+    for r in doc["requests"]:
+        sched.submit(
+            np.asarray(r["prompt"], np.int32), r["max_new_tokens"],
+            rid=r["rid"], arrival=r["arrival"],
+        )
+    results = sched.run()
+    eng = ServeEngine(cfg, params, max_len=doc["scheduler"]["max_len"])
+    return doc, sched, results, eng
+
+
+def test_golden_serving_paged_cache_layout(serving_replay):
+    """Arena shapes, leaf classification, and the reserved zero page are
+    part of the persisted-serving contract — drift fails here, not in
+    the field."""
+    doc, sched, _, _ = serving_replay
+    kv = sched.kv
+    frozen = doc["paged_cache"]
+    assert kv.view_pages == frozen["view_pages"]
+    assert kv.zero_page == frozen["zero_page"]
+    assert kv.num_leaves == frozen["num_leaves"]
+    assert list(kv.paged) == frozen["paged"]
+    got_shapes = [None if a is None else list(a.shape) for a in kv._arenas]
+    assert got_shapes == frozen["arena_shapes"]
+
+
+def test_golden_serving_transcript(serving_replay):
+    """The continuous-batching schedule (admissions, the forced eviction
+    and lossless resume, page tables per step) is integer-deterministic
+    and frozen."""
+    doc, sched, _, _ = serving_replay
+    assert len(sched.transcript) == len(doc["transcript"])
+    for got, want in zip(sched.transcript, doc["transcript"]):
+        assert got == want
+    for k, v in doc["stats"].items():
+        assert sched.stats[k] == v, k
+    assert doc["stats"]["evictions"] >= 1  # the fixture must exercise it
+
+
+def test_golden_serving_tokens_match_frozen_and_single_sequence(serving_replay):
+    """Batched continuous-batching decode is regression-pinned BOTH ways:
+    against the frozen token ids and against a live single-sequence
+    ``generate`` run per request."""
+    import jax.numpy as jnp_
+
+    doc, _, results, eng = serving_replay
+    for r in doc["requests"]:
+        rid = r["rid"]
+        np.testing.assert_array_equal(
+            results[rid]["tokens"], np.asarray(doc["tokens"][rid], np.int32)
+        )
+        ref, _ = eng.generate(
+            jnp_.asarray(np.asarray(r["prompt"], np.int32))[None],
+            r["max_new_tokens"],
+        )
+        np.testing.assert_array_equal(results[rid]["tokens"], np.asarray(ref)[0])
+
+
 @pytest.mark.parametrize("name", NAMES)
 def test_shard_plan_cache_roundtrip(name):
     """Partition records for the fixtures round-trip the plan cache and

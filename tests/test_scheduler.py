@@ -1,0 +1,314 @@
+"""Continuous-batching scheduler: equivalence, invariants, plan-warm admission.
+
+The core contract: N concurrent requests of mixed lengths decoded by the
+continuous-batching scheduler produce tokens IDENTICAL (and logits within
+1e-6) to N independent single-sequence ``ServeEngine.generate`` runs — for
+greedy and sampled decoding, through forced eviction/resume, and with a
+1-D device mesh attached.  Scheduling itself is exercised with seeded fake
+clocks: deterministic transcripts, capacity invariants every step, no
+starvation under either admission policy.
+"""
+import dataclasses
+import itertools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core.cache import PlanCache
+from repro.models import decode_step, init_cache, init_params, prefill
+from repro.serve.engine import ServeEngine
+from repro.sparse import random_pattern
+
+from test_distributed import run_with_devices
+
+
+@pytest.fixture(scope="module")
+def engine():
+    """f32 reduced llama engine — the single-sequence numeric reference."""
+    cfg = get_config("llama3.2-3b", reduced=True)
+    cfg = dataclasses.replace(cfg, compute_dtype="float32", param_dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return ServeEngine(cfg, params, max_len=20)
+
+
+def _prompts(cfg, lengths, seed=7):
+    rng = np.random.default_rng(seed)
+    return [
+        rng.integers(0, cfg.vocab_size, size=(n,)).astype(np.int32)
+        for n in lengths
+    ]
+
+
+def _reference(engine, prompt, max_new, temperature=0.0, rng=None):
+    out, _ = engine.generate(
+        jnp.asarray(prompt)[None], max_new, temperature=temperature, rng=rng
+    )
+    return np.asarray(out)[0]
+
+
+def _fake_clock(step=0.5):
+    counter = itertools.count()
+    return lambda: next(counter) * step
+
+
+# ---------------------------------------------------------------------- #
+# token + logit equivalence vs N independent generate() runs
+# ---------------------------------------------------------------------- #
+def test_greedy_matches_independent_generate_with_logits(engine):
+    cfg = engine.cfg
+    prompts = _prompts(cfg, [3, 7, 5])
+    gens = [6, 4, 8]
+    reqs = [
+        {"prompt": p, "max_new_tokens": g, "rid": f"r{i}"}
+        for i, (p, g) in enumerate(zip(prompts, gens))
+    ]
+    results, sched = engine.serve(
+        reqs, page_size=4, max_batch=3, record_logits=True
+    )
+    for i, (p, g) in enumerate(zip(prompts, gens)):
+        ref = _reference(engine, p, g)
+        np.testing.assert_array_equal(results[f"r{i}"]["tokens"], ref)
+        # logits within 1e-6 of the single-sequence path, step by step
+        P = len(p)
+        cache = init_cache(cfg, 1, P + g)
+        logits, cache = prefill(engine.params, cfg, jnp.asarray(p)[None], cache)
+        rows = [np.asarray(logits[:, -1].astype(jnp.float32))[0]]
+        nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), -1)[:, None].astype(
+            jnp.int32
+        )
+        for j in range(g - 1):
+            lg, cache = decode_step(
+                engine.params, cfg, nxt, cache, jnp.int32(P + j)
+            )
+            row = lg[:, 0].astype(jnp.float32)
+            rows.append(np.asarray(row)[0])
+            nxt = jnp.argmax(row, -1)[:, None].astype(jnp.int32)
+        got = sched.requests[f"r{i}"].logits
+        assert len(got) == len(rows) == g
+        for a, b in zip(got, rows):
+            np.testing.assert_allclose(a, b, atol=1e-6, rtol=0)
+
+
+def test_sampling_matches_independent_generate(engine):
+    cfg = engine.cfg
+    prompts = _prompts(cfg, [4, 6, 3], seed=11)
+    reqs = [
+        {
+            "prompt": p,
+            "max_new_tokens": 6,
+            "temperature": 0.8,
+            "rng": jax.random.PRNGKey(100 + i),
+            "rid": f"s{i}",
+        }
+        for i, p in enumerate(prompts)
+    ]
+    results, _ = engine.serve(reqs, page_size=4, max_batch=3)
+    for i, p in enumerate(prompts):
+        ref = _reference(
+            engine, p, 6, temperature=0.8, rng=jax.random.PRNGKey(100 + i)
+        )
+        np.testing.assert_array_equal(results[f"s{i}"]["tokens"], ref)
+
+
+def test_eviction_and_resume_are_lossless(engine):
+    """Page pressure forces mid-decode eviction; the preempted sequence
+    resumes bit-for-bit, so final tokens still match independent runs."""
+    cfg = engine.cfg
+    prompts = _prompts(cfg, [6, 6, 6], seed=23)
+    reqs = [
+        {"prompt": p, "max_new_tokens": 8, "rid": f"e{i}"}
+        for i, p in enumerate(prompts)
+    ]
+    # 3 lanes x final length 13 = 4 pages each (12 total) but only 9 pages
+    results, sched = engine.serve(
+        reqs, page_size=4, max_batch=3, num_pages=9
+    )
+    assert sched.stats["evictions"] > 0, "test must exercise eviction"
+    assert sched.stats["resumes"] > 0
+    for i, p in enumerate(prompts):
+        ref = _reference(engine, p, 8)
+        np.testing.assert_array_equal(results[f"e{i}"]["tokens"], ref)
+        assert results[f"e{i}"]["state"] == "FINISHED"
+
+
+def test_more_requests_than_lanes_all_finish_fcfs(engine):
+    cfg = engine.cfg
+    prompts = _prompts(cfg, [3, 5, 4, 6, 2, 4], seed=31)
+    reqs = [
+        {"prompt": p, "max_new_tokens": 3 + (i % 3), "rid": f"q{i}"}
+        for i, p in enumerate(prompts)
+    ]
+    results, sched = engine.serve(reqs, page_size=4, max_batch=2)
+    assert sched.stats["finished"] == len(reqs)
+    for i, p in enumerate(prompts):
+        ref = _reference(engine, p, 3 + (i % 3))
+        np.testing.assert_array_equal(results[f"q{i}"]["tokens"], ref)
+
+
+# ---------------------------------------------------------------------- #
+# event-driven simulation: fake clock, invariants every step
+# ---------------------------------------------------------------------- #
+def test_step_invariants_under_fake_clock(engine):
+    cfg = engine.cfg
+    sched = engine.make_scheduler(
+        page_size=4, max_batch=2, num_pages=8, clock=_fake_clock()
+    )
+    for i, p in enumerate(_prompts(cfg, [5, 3, 6, 4], seed=41)):
+        sched.submit(p, max_new_tokens=5, rid=f"c{i}", arrival=float(i))
+    kv = sched.kv
+    seen_running = set()
+    while sched.pending():
+        ev = sched.step()
+        # capacity never exceeded, allocator never leaks or double-books
+        kv.allocator.check()
+        assert kv.allocator.num_held <= kv.allocator.num_pages
+        assert sum(r is not None for r in sched.lanes) <= sched.max_batch
+        assert len(ev["running"]) <= sched.max_batch
+        held = sum(len(t) for t in kv.page_table.values())
+        assert held == kv.allocator.num_held
+        seen_running.update(ev["running"])
+        assert sched.stats["steps"] < 500
+    assert seen_running == {f"c{i}" for i in range(4)}  # no starvation
+    assert kv.allocator.num_free == kv.allocator.num_pages  # all released
+    for i in range(4):
+        m = sched.requests[f"c{i}"].metrics
+        # timestamps come from the fake clock and are ordered
+        assert 0 <= m["admitted_at"] <= m["finished_at"]
+        assert m["first_token_at"] <= m["finished_at"]
+
+
+def test_transcript_is_deterministic_in_lengths_only(engine):
+    """Admission/eviction/page tables depend only on integer lengths and
+    arrival order — never token values — so two runs over different
+    prompts of the same lengths yield identical transcripts (the property
+    the golden serving fixture freezes)."""
+    cfg = engine.cfg
+    lengths, gens = [6, 6, 5], [6, 5, 6]
+
+    def transcript(seed):
+        sched = engine.make_scheduler(
+            page_size=4, max_batch=2, num_pages=7, clock=_fake_clock()
+        )
+        for i, p in enumerate(_prompts(cfg, lengths, seed=seed)):
+            sched.submit(p, max_new_tokens=gens[i], rid=f"t{i}", arrival=float(i))
+        sched.run()
+        return sched.transcript
+
+    assert transcript(seed=1) == transcript(seed=2)
+
+
+# ---------------------------------------------------------------------- #
+# plan-warm admission
+# ---------------------------------------------------------------------- #
+def test_cold_plans_staged_once_then_warm_restart_stages_zero(engine, tmp_path):
+    """Cold patterns are staged off the decode path (bounded per step); a
+    restarted scheduler over the same persistent cache stages ZERO."""
+    cfg = engine.cfg
+    store = PlanCache(str(tmp_path))
+    pats = tuple(
+        random_pattern(64, 64, 16, 16, 0.4, seed=s) for s in (0, 1)
+    )
+    prompts = _prompts(cfg, [4, 5], seed=51)
+
+    def serve_once():
+        sched = engine.make_scheduler(
+            page_size=4, max_batch=2, plan_cache=store,
+            cold_stage_budget=1, clock=_fake_clock(),
+        )
+        for i, p in enumerate(prompts):
+            sched.submit(
+                p, max_new_tokens=4, patterns=pats, rid=f"p{i}",
+                arrival=float(i),
+            )
+        results = sched.run()
+        return results, sched
+
+    results, sched = serve_once()
+    assert sched.stats["plans_staged"] >= len(pats)
+    assert all(r["state"] == "FINISHED" for r in results.values())
+    staged_events = [ev for ev in sched.transcript if ev["staged"]]
+    assert all(len(ev["staged"]) <= 1 for ev in staged_events)  # budget
+    # "restart": a fresh scheduler over the same on-disk plan cache
+    results2, sched2 = serve_once()
+    assert sched2.stats["plans_staged"] == 0, "warm restart must not re-stage"
+    np.testing.assert_array_equal(
+        results["p0"]["tokens"], results2["p0"]["tokens"]
+    )
+
+
+def test_warm_first_policy_reorders_but_never_starves(engine, tmp_path):
+    """warm_first admits plan-warm requests ahead of cold ones; aging
+    (max_skips) guarantees the cold head still runs."""
+    cfg = engine.cfg
+    store = PlanCache(str(tmp_path))
+    cold_pat = (random_pattern(64, 64, 16, 16, 0.4, seed=9),)
+    prompts = _prompts(cfg, [4, 4, 4], seed=61)
+    sched = engine.make_scheduler(
+        page_size=4, max_batch=1, plan_cache=store, policy="warm_first",
+        cold_stage_budget=0,  # never stage: the cold request stays cold
+        max_skips=2, clock=_fake_clock(),
+    )
+    sched.submit(prompts[0], 4, patterns=cold_pat, rid="cold", arrival=0.0)
+    sched.submit(prompts[1], 4, rid="warm1", arrival=1.0)
+    sched.submit(prompts[2], 4, rid="warm2", arrival=2.0)
+    results = sched.run()
+    assert all(r["state"] == "FINISHED" for r in results.values())
+    assert sched.stats["plans_staged"] == 0
+    m = {rid: sched.requests[rid].metrics["admitted_at"] for rid in results}
+    # a later-arriving warm request was admitted before the cold head...
+    assert m["warm1"] < m["cold"]
+    # ...and tokens are still exactly the single-sequence reference
+    np.testing.assert_array_equal(
+        results["cold"]["tokens"], _reference(engine, prompts[0], 4)
+    )
+
+
+def test_warm_first_without_aging_would_not_default(engine):
+    with pytest.raises(ValueError):
+        engine.make_scheduler(policy="best_effort")
+
+
+# ---------------------------------------------------------------------- #
+# 1-D mesh path: scheduler composes with sharded staging
+# ---------------------------------------------------------------------- #
+def test_mesh_scheduler_matches_generate_and_warms_shard_plans():
+    run_with_devices("""
+        import dataclasses, tempfile
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.core.cache import PlanCache
+        from repro.launch.mesh import make_staging_mesh
+        from repro.models import init_params
+        from repro.serve.engine import ServeEngine
+        from repro.sparse import random_pattern
+
+        cfg = get_config("llama3.2-3b", reduced=True)
+        cfg = dataclasses.replace(
+            cfg, compute_dtype="float32", param_dtype="float32")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        mesh = make_staging_mesh(2)
+        eng = ServeEngine(cfg, params, max_len=20, mesh=mesh)
+
+        rng = np.random.default_rng(3)
+        prompts = [rng.integers(0, cfg.vocab_size, size=(n,)).astype(np.int32)
+                   for n in (3, 6, 4)]
+        store = PlanCache(tempfile.mkdtemp())
+        pat = (random_pattern(64, 64, 16, 16, 0.4, seed=2),)
+        reqs = [{"prompt": p, "max_new_tokens": 5, "rid": f"m{i}",
+                 "patterns": pat, "arrival": float(i)}
+                for i, p in enumerate(prompts)]
+        results, sched = eng.serve(
+            reqs, page_size=4, max_batch=2, plan_cache=store)
+        assert sched.mesh is mesh
+        # base plan + one per shard of the 1-D mesh were staged at admission
+        assert sched.stats["plans_staged"] >= 3, sched.stats
+        for i, p in enumerate(prompts):
+            out, _ = eng.generate(jnp.asarray(p)[None], 5)
+            np.testing.assert_array_equal(
+                results[f"m{i}"]["tokens"], np.asarray(out)[0])
+        print("MESH-EQ-OK")
+    """, n=2)
