@@ -1,0 +1,134 @@
+"""Dropless MoE routed FFN: dense capacity-buffer einsums vs the
+block-sparse sdd/dsd formulation (ISSUE 7).
+
+Both paths consume the SAME (G, E, C, d) capacity buffer; the dense path
+multiplies every capacity slot (occupied or not) through its expert's FFN,
+the dropless path touches only the occupied capacity blocks
+(``models.moe._dropless_ffn``).  The occupancy sweep pins the story: the
+sparse path computes ``flops_fraction`` of the dense FLOPs (the static
+nnz bound over the full block grid — occupancy plus up to one partial
+block per expert), so its win should track 1/flops_fraction; the
+``derived`` column reports speedup next to that fraction
+(``proportionality = speedup * flops_fraction``, ~1 when the win is
+FLOPs-proportional).  The occupancy-0.25 rows are the acceptance case:
+75% of the capacity blocks empty.
+
+Standalone CI entry point::
+
+    PYTHONPATH=src python -m benchmarks.bench_moe --smoke
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import csv_row, timeit
+
+
+def _cfg(E: int, d: int, f: int, bm: int):
+    from repro.models.config import (
+        LayerSpec,
+        ModelConfig,
+        MoEConfig,
+        uniform_groups,
+    )
+
+    moe = MoEConfig(num_experts=E, top_k=1, d_ff=f, dropless=True,
+                    dropless_block=bm)
+    return ModelConfig(
+        name="bench-moe", family="moe", d_model=d, n_heads=2, n_kv_heads=2,
+        head_dim=8, d_ff=f, vocab_size=64,
+        groups=uniform_groups(1, LayerSpec(ffn="moe")),
+        ffn_type="relu2", moe=moe,
+    )
+
+
+def _buffer(rng, G, E, C, d, occupancy):
+    """(buf, counts): each expert's first ``occupancy * C`` capacity slots
+    hold tokens, the rest are zero — the buffer moe_apply's dispatch
+    produces at per-expert load ``occupancy``."""
+    n = int(round(C * occupancy))
+    buf = np.zeros((G, E, C, d), np.float32)
+    buf[:, :, :n] = rng.standard_normal((G, E, n, d)).astype(np.float32)
+    counts = np.full((G, E), n, np.int32)
+    return jnp.asarray(buf), jnp.asarray(counts)
+
+
+def main(quick: bool = True) -> None:
+    from repro.models.layers import _act
+    from repro.models.moe import _dropless_ffn
+
+    G, E, C, d, f, bm = (
+        (1, 8, 512, 256, 256, 64) if quick else (2, 16, 1024, 256, 256, 64)
+    )
+    cfg = _cfg(E, d, f, bm)
+    rng = np.random.default_rng(0)
+    w1 = jnp.asarray(rng.standard_normal((E, d, f)).astype(np.float32))
+    w2 = jnp.asarray(rng.standard_normal((E, f, d)).astype(np.float32))
+    p = {"w1": w1, "w2": w2}
+
+    @jax.jit
+    def dense_ffn(buf):
+        h = _act(cfg, jnp.einsum("gecd,edf->gecf", buf, w1))
+        return jnp.einsum("gecf,efd->gecd", h, w2)
+
+    for occupancy in (0.25, 0.5, 1.0):
+        buf, counts = _buffer(rng, G, E, C, d, occupancy)
+        # per-group assignment total sizes the static nnz bound (in
+        # moe_apply this is Tg * top_k); tight bound = FLOPs-proportional
+        total = int(np.asarray(counts)[0].sum())
+        sparse_ffn = jax.jit(
+            lambda buf, counts, _t=total: _dropless_ffn(p, buf, counts, _t, cfg)
+        )
+        ref = dense_ffn(buf)
+        out = sparse_ffn(buf, counts)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4
+        )
+        td = timeit(dense_ffn, buf, warmup=2, iters=5)
+        ts = timeit(sparse_ffn, buf, counts, warmup=2, iters=5)
+        # blocks the sparse path actually computes / blocks in the grid
+        nnz = min(E * (C // bm), -(-total // bm) + E)
+        frac = nnz / (E * (C // bm))
+        tag = f"G{G}xE{E}xC{C}xd{d}"
+        csv_row(
+            f"moe_ffn/dense/{tag}/occ{occupancy}",
+            td * 1e6,
+            "flops_fraction=1.00",
+        )
+        csv_row(
+            f"moe_ffn/dropless/{tag}/occ{occupancy}",
+            ts * 1e6,
+            f"speedup={td / ts:.2f},flops_fraction={frac:.3f},"
+            f"proportionality={(td / ts) * frac:.2f}",
+        )
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: quick sizes, write BENCH_results.json")
+    ap.add_argument("--json", default="BENCH_results.json")
+    ap.add_argument("--no-json", action="store_true")
+    args = ap.parse_args()
+    common.CURRENT_SUITE = "moe"
+    print("name,us_per_call,derived")
+    main(quick=args.smoke)
+    common.CURRENT_SUITE = None
+    if not args.no_json:
+        doc = {
+            "version": 1,
+            "mode": "smoke" if args.smoke else "quick",
+            "failed_suites": [],
+            "rows": common.ROWS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"wrote {len(common.ROWS)} rows to {args.json}", file=sys.stderr)

@@ -24,6 +24,7 @@ from . import (
     bench_codegen_variants,
     bench_inspection,
     bench_mesh2d,
+    bench_moe,
     bench_scaling,
     bench_serving,
     bench_sharded,
@@ -46,9 +47,10 @@ SUITES = {
     "sharded": bench_sharded.main,  # ISSUE 3: 1/2/4/8-device shard_map
     "mesh2d": bench_mesh2d.main,  # ISSUE 5: (shards x model) factorizations
     "serving": bench_serving.main,  # ISSUE 6: continuous-batching traffic
+    "moe": bench_moe.main,  # ISSUE 7: dense-capacity vs dropless FFN
 }
 
-SMOKE_SUITES = ("spmv", "sharded", "mesh2d", "serving")
+SMOKE_SUITES = ("spmv", "sharded", "mesh2d", "serving", "moe")
 
 
 def main() -> None:

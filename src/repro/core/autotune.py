@@ -50,6 +50,11 @@ __all__ = [
     "tune_num_workers",
     "autotune_stats",
     "reset_autotune_stats",
+    "StructureRateTracker",
+    "structure_tracker",
+    "observe_structure",
+    "choose_format",
+    "reset_structure_trackers",
 ]
 
 # inspection-time knobs (overridable per call)
@@ -70,6 +75,89 @@ def autotune_stats() -> dict:
 
 def reset_autotune_stats() -> None:
     _STATS.update({k: 0 for k in _STATS})
+
+
+# ---------------------------------------------------------------------- #
+# staged-VBR vs fixed-block arbitration (structure-change rate)
+# ---------------------------------------------------------------------- #
+# Staging + measured tuning pay an inspection cost that amortizes only if
+# the SAME structure recurs; a structure that changes every call (per-batch
+# MoE routing) must take the inspection-free fixed-block op family
+# (kernels.bsr_ops) instead.  The tracker watches the stream of structure
+# hashes one callsite ("family") produces and measures how often
+# consecutive calls disagree — static patterns score ~0, per-batch
+# topologies score ~1.
+FIXED_BLOCK_CHANGE_RATE = 0.5
+MIN_FORMAT_OBSERVATIONS = 4
+TRACKER_WINDOW = 32
+
+
+class StructureRateTracker:
+    """Sliding-window observer of one callsite's structure-hash stream."""
+
+    def __init__(self, window: int = TRACKER_WINDOW):
+        from collections import deque
+
+        self._hashes = deque(maxlen=int(window))
+
+    def observe(self, structure_hash: str) -> None:
+        self._hashes.append(structure_hash)
+
+    @property
+    def observations(self) -> int:
+        return len(self._hashes)
+
+    def change_rate(self) -> float:
+        """Fraction of consecutive observation pairs whose hash changed."""
+        hs = list(self._hashes)
+        if len(hs) < 2:
+            return 0.0
+        return sum(a != b for a, b in zip(hs, hs[1:])) / (len(hs) - 1)
+
+
+_STRUCTURE_TRACKERS: dict = {}
+
+
+def structure_tracker(family: str, window: int = TRACKER_WINDOW):
+    t = _STRUCTURE_TRACKERS.get(family)
+    if t is None:
+        t = _STRUCTURE_TRACKERS[family] = StructureRateTracker(window)
+    return t
+
+
+def observe_structure(family: str, structure_hash: str) -> None:
+    structure_tracker(family).observe(structure_hash)
+
+
+def reset_structure_trackers() -> None:
+    _STRUCTURE_TRACKERS.clear()
+
+
+def choose_format(
+    family: str,
+    structure_hash: str,
+    *,
+    threshold: float = FIXED_BLOCK_CHANGE_RATE,
+    min_observations: int = MIN_FORMAT_OBSERVATIONS,
+) -> str:
+    """Observe ``structure_hash`` for ``family`` and arbitrate the format:
+
+      * ``"staged"``       — structure recurs; keep the measured staged-VBR
+                             path (plan cache, autotune, compile-once).
+      * ``"fixed_block"``  — structure churns faster than ``threshold``;
+                             take the inspection-free fixed-block op family
+                             WITHOUT touching the plan cache (a plan per
+                             throwaway topology would thrash it).
+
+    The first ``min_observations`` calls stay staged: a one-shot pattern
+    is indistinguishable from a static one, and the staged path's
+    heuristic fallback is cheap until the rate signal is real.
+    """
+    t = structure_tracker(family)
+    t.observe(structure_hash)
+    if t.observations < min_observations:
+        return "staged"
+    return "fixed_block" if t.change_rate() > threshold else "staged"
 
 
 # ---------------------------------------------------------------------- #

@@ -1,3 +1,4 @@
 """Pallas TPU kernels for the SABLE compute hot-spots."""
-from . import ops, ref
+from . import bsr_ops, ops, ref
+from .bsr_ops import dds, dsd, sdd
 from .ops import bsr_spmm, bsr_spmv

@@ -17,8 +17,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-import numpy as np
-
 
 @dataclasses.dataclass(frozen=True)
 class MoEConfig:
@@ -30,6 +28,11 @@ class MoEConfig:
     capacity_factor: float = 1.25
     router_noise: float = 0.0
     aux_loss_coef: float = 0.001
+    # dropless routed FFN: full-capacity buckets (nothing dropped) with the
+    # expert FFN computed block-sparsely over OCCUPIED capacity blocks only
+    # (kernels.bsr_ops sdd/dsd) — FLOPs track actual tokens, not E*C
+    dropless: bool = False
+    dropless_block: int = 8  # capacity-slot block rows per sparse block
 
 
 @dataclasses.dataclass(frozen=True)

@@ -45,8 +45,61 @@ def moe_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
 
 def _capacity(tokens: int, cfg: ModelConfig) -> int:
     mc = cfg.moe
+    if mc.dropless:
+        # full capacity: an expert can receive at most one slot per token
+        # (top_k indices are distinct), so C = tokens guarantees no drops;
+        # round to the sparse block size so capacity blocks tile exactly
+        bm = mc.dropless_block
+        return max(bm, -(-tokens // bm) * bm)
     c = int(np.ceil(tokens * mc.top_k / mc.num_experts * mc.capacity_factor))
     return max(8, -(-c // 8) * 8)  # round up to 8 for TPU-friendly shapes
+
+
+def _dropless_ffn(p: dict, buf: jnp.ndarray, counts: jnp.ndarray,
+                  tokens: int, cfg: ModelConfig) -> jnp.ndarray:
+    """Expert FFN over only the OCCUPIED capacity blocks.
+
+    The (G, E, C, d) buffer is viewed as one tall dense matrix of
+    (dropless_block, d) row-blocks; each (group, expert) bucket occupies
+    ``ceil(count/bm)`` of them.  With the per-expert weights stacked
+    side-by-side as (d, E*f), the routed first matmul is exactly ``sdd``
+    under the topology "bucket row-block x its expert's column-block"
+    (inspection-free: the mask is derived in-trace from the routing
+    counts), the activation runs elementwise on the block data, and
+    ``dsd`` against the stacked (E*f, d) second weights maps back to the
+    buffer.  Unvisited (empty) capacity blocks come back as zero rows, so
+    the combine gather is unchanged.  FLOPs scale with occupied blocks
+    (~ tokens * top_k), not with the dense E*C buffer.
+    """
+    from ..kernels.bsr_ops import dsd, sdd
+    from ..sparse.block_csr import topology_from_mask
+
+    mc = cfg.moe
+    G, E, C, d = buf.shape
+    f = p["w1"].shape[-1]
+    bm = mc.dropless_block
+    Cb = C // bm
+
+    occ = -(-counts // bm)  # (G, E) blocks needed per bucket
+    occ_mask = jnp.arange(Cb)[None, None, :] < occ[:, :, None]  # (G, E, Cb)
+    eye = jnp.eye(E, dtype=bool)  # bucket (g, e) multiplies expert e only
+    mask = (occ_mask[..., None] & eye[None, :, None, :]).reshape(G * E * Cb, E)
+    # each expert wastes at most one partial block per group
+    nnz_max = G * min(E * Cb, -(-tokens * mc.top_k // bm) + E)
+    topo = topology_from_mask(mask, (bm, f), nnz_max=nnz_max)
+
+    a = buf.reshape(G * E * C, d)
+    w1 = fetch(p["w1"].astype(buf.dtype), None, None, None)
+    h = sdd(a, jnp.transpose(w1, (1, 0, 2)).reshape(d, E * f), topo)
+    if cfg.ffn_type == "swiglu":
+        w3 = fetch(p["w3"].astype(buf.dtype), None, None, None)
+        g = sdd(a, jnp.transpose(w3, (1, 0, 2)).reshape(d, E * f), topo)
+        h = h.with_data(jax.nn.silu(h.data) * g.data)
+    else:
+        h = h.with_data(_act(cfg, h.data))
+    w2 = fetch(p["w2"].astype(buf.dtype), None, None, None)
+    out = dsd(h, w2.reshape(E * f, d))
+    return out.reshape(G, E, C, d)
 
 
 def moe_apply(p: dict, x: jnp.ndarray, cfg: ModelConfig):
@@ -101,18 +154,26 @@ def moe_apply(p: dict, x: jnp.ndarray, cfg: ModelConfig):
     )(idx, slot, xk)
     buf = constrain(buf, DP, MODEL, None, None)
 
-    # expert FFN: batched einsum; E sharded over 'model' (EP) — the
-    # (G@dp, E, C, d) -> (G, E@model, C, d) reshard is the EP all-to-all
-    h = jnp.einsum("gecd,edf->gecf", buf,
-                   fetch(p["w1"].astype(xg.dtype), MODEL, None, None))
-    if cfg.ffn_type == "swiglu":
-        g = jnp.einsum("gecd,edf->gecf", buf,
-                       fetch(p["w3"].astype(xg.dtype), MODEL, None, None))
-        h = jax.nn.silu(h) * g
+    if mc.dropless:
+        # dropless: FFN only over occupied capacity blocks (block-sparse
+        # sdd/dsd over an in-trace topology; single flattened matrix, so
+        # no EP resharding — the dropless path is the per-batch-topology
+        # regime, not the EP-sharded dense-buffer one)
+        counts = onehot.sum(axis=1)  # (G, E) tokens routed per bucket
+        out_buf = _dropless_ffn(p, buf, counts, Tg, cfg)
     else:
-        h = _act(cfg, h)
-    out_buf = jnp.einsum("gecf,efd->gecd", h,
-                         fetch(p["w2"].astype(xg.dtype), MODEL, None, None))
+        # expert FFN: batched einsum; E sharded over 'model' (EP) — the
+        # (G@dp, E, C, d) -> (G, E@model, C, d) reshard is the EP all-to-all
+        h = jnp.einsum("gecd,edf->gecf", buf,
+                       fetch(p["w1"].astype(xg.dtype), MODEL, None, None))
+        if cfg.ffn_type == "swiglu":
+            g = jnp.einsum("gecd,edf->gecf", buf,
+                           fetch(p["w3"].astype(xg.dtype), MODEL, None, None))
+            h = jax.nn.silu(h) * g
+        else:
+            h = _act(cfg, h)
+        out_buf = jnp.einsum("gecf,efd->gecd", h,
+                             fetch(p["w2"].astype(xg.dtype), MODEL, None, None))
     # return expert outputs to the data shards BEFORE the combine gather:
     # an explicit all-gather over 'model' of the dense buffer (~0.3 GB per
     # group) so the gather below stays local — letting the partitioner

@@ -25,14 +25,37 @@ reported in ``warmup_stats``.
 from __future__ import annotations
 
 import functools
+import itertools
 import time
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..models.config import ModelConfig
 from ..models.transformer import decode_step, encode, init_cache, prefill
+
+# warn-once flag for the enc-dec serve() fallback (tests reset it to
+# re-assert the warning fires)
+_ENCDEC_FALLBACK_WARNED = False
+_FALLBACK_RID = itertools.count()
+
+
+def _warn_encdec_fallback() -> None:
+    global _ENCDEC_FALLBACK_WARNED
+    if _ENCDEC_FALLBACK_WARNED:
+        return
+    _ENCDEC_FALLBACK_WARNED = True
+    warnings.warn(
+        "enc-dec config: the paged KV cache only pages self-attention "
+        "KV (cross-attention KV is per-request static), so serve() is "
+        "running the single-batch generate() fallback — no continuous "
+        "batching, no paging (warmup_stats['paged'] = False)",
+        UserWarning,
+        stacklevel=3,
+    )
 
 
 def _has_sparse_ffn(params, patterns) -> bool:
@@ -169,11 +192,51 @@ class ServeEngine:
     def serve(self, requests, *, max_steps: int = 100_000, **kw):
         """Submit ``requests`` (dicts of ``submit`` kwargs) and run the
         scheduler to completion.  Returns ``(results, scheduler)`` where
-        results maps rid -> {tokens, prompt_len, metrics, state}."""
+        results maps rid -> {tokens, prompt_len, metrics, state}.
+
+        Enc-dec configs can't use the paged scheduler (the paged cache
+        pages self-attention KV only); instead of failing mid-submit the
+        fallback is EXPLICIT: a once-per-process warning, ``paged: False``
+        in ``warmup_stats``, and each request runs through ``generate()``
+        (scheduler slot in the return is None).  Fallback request dicts
+        accept an extra ``src_embeds`` entry ((S, d) or (1, S, d))."""
+        if self.cfg.is_encdec:
+            _warn_encdec_fallback()
+            self.warmup_stats["paged"] = False
+            return self._serve_fallback(requests), None
+        self.warmup_stats["paged"] = True
         sched = self.make_scheduler(**kw)
         for r in requests:
             sched.submit(**r)
         return sched.run(max_steps=max_steps), sched
+
+    def _serve_fallback(self, requests) -> dict:
+        """Sequential ``generate()`` execution with scheduler-shaped
+        results (rid -> {tokens, prompt_len, metrics, state})."""
+        results = {}
+        for r in requests:
+            r = dict(r)
+            rid = r.pop("rid", None) or f"req{next(_FALLBACK_RID)}"
+            prompt = np.asarray(r.pop("prompt"), np.int32).reshape(-1)
+            src = r.pop("src_embeds", None)
+            if src is not None:
+                src = jnp.asarray(src)
+                if src.ndim == 2:
+                    src = src[None]
+            out, stats = self.generate(
+                jnp.asarray(prompt[None]),
+                r.pop("max_new_tokens"),
+                temperature=r.pop("temperature", 0.0),
+                src_embeds=src,
+                rng=r.pop("rng", None),
+            )
+            results[rid] = {
+                "tokens": np.asarray(out[0]),
+                "prompt_len": int(prompt.shape[0]),
+                "metrics": {**stats, "fallback": "generate"},
+                "state": "FINISHED",
+            }
+        return results
 
     # ------------------------------------------------------------------ #
     # single-batch compatibility shim (the numeric reference path)

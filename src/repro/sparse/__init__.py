@@ -1,4 +1,5 @@
 """NN integration of SABLE block-sparse weights."""
+from .block_csr import BlockMatrix, mask_from_dense, topology_from_mask
 from .linear import (
     BlockPattern,
     choose_matmul_strategy,

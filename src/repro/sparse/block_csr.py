@@ -1,0 +1,245 @@
+"""Fixed-block blocked-CSR-COO matrices: inspection-free dynamic sparsity.
+
+``core.staging`` amortizes inspection over many calls with the SAME
+structure; this module is the other regime — structures that change every
+call (MoE routing emits a new topology per batch), where any host-side
+inspection would land on the critical path.  Following MegaBlocks/STK
+(SNIPPETS.md §1), a :class:`BlockMatrix` uses a *fixed* block size and a
+hybrid blocked-CSR-COO encoding: per-block row indices (COO, sorted) for
+the kernels' output schedule, column indices for the DMA gather, and CSR
+row offsets for row lookup.  Everything — indices, offsets, validity — is
+derivable **in-trace** from a routing mask with ``jnp.nonzero(size=...)``
+and cumulative sums: no host sync, no staging, no plan cache.
+
+Static shapes are preserved by padding to ``nnz_max`` block slots:
+padded slots carry ``row == n_block_rows`` (an out-of-range sentinel that
+sorts after every real row), ``col == 0`` and all-zero data, so every
+consumer can either drop them (scatter ``mode='drop'``) or let them
+accumulate zeros.  The invariant "invalid slots hold zero data" is
+maintained by every constructor.
+
+The compute family over this format lives in ``kernels.bsr_ops``
+(``dsd`` / ``dds`` / ``sdd``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["BlockMatrix", "mask_from_dense", "topology_from_mask"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BlockMatrix:
+    """A (M, N) matrix stored as ``nnz_max`` fixed (bm, bn) blocks.
+
+    Fields (all jnp arrays; shape/block are static aux data):
+      data            (nnz_max, bm, bn)  block values, zero at invalid slots
+      row_indices     (nnz_max,) int32   block-row per slot, SORTED ascending;
+                                         invalid slots == n_block_rows
+      column_indices  (nnz_max,) int32   block-col per slot; invalid == 0
+      offsets         (n_block_rows+1,) int32  CSR offsets over valid blocks
+    """
+
+    shape: tuple  # (M, N) — static
+    block: tuple  # (bm, bn) — static
+    data: jnp.ndarray
+    row_indices: jnp.ndarray
+    column_indices: jnp.ndarray
+    offsets: jnp.ndarray
+
+    # -------------------------------------------------------------- #
+    # pytree protocol: arrays are leaves, shape/block are aux data
+    # -------------------------------------------------------------- #
+    def tree_flatten(self):
+        leaves = (self.data, self.row_indices, self.column_indices, self.offsets)
+        return leaves, (self.shape, self.block)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        shape, block = aux
+        return cls(shape, block, *leaves)
+
+    # -------------------------------------------------------------- #
+    @property
+    def n_block_rows(self) -> int:
+        return self.shape[0] // self.block[0]
+
+    @property
+    def n_block_cols(self) -> int:
+        return self.shape[1] // self.block[1]
+
+    @property
+    def nnz_max(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def valid(self) -> jnp.ndarray:
+        """(nnz_max,) bool — which slots hold a real block."""
+        return self.row_indices < self.n_block_rows
+
+    @property
+    def n_blocks(self) -> jnp.ndarray:
+        """Traced count of valid blocks (== offsets[-1])."""
+        return self.offsets[-1]
+
+    def topology(self) -> "BlockMatrix":
+        """Same structure, all-ones data — the ``sdd`` output template."""
+        bm, bn = self.block
+        ones = jnp.where(
+            self.valid[:, None, None],
+            jnp.ones((self.nnz_max, bm, bn), self.data.dtype),
+            0.0,
+        )
+        return dataclasses.replace(self, data=ones)
+
+    def with_data(self, data: jnp.ndarray) -> "BlockMatrix":
+        """Replace block values (e.g. after an elementwise activation on
+        ``.data``); invalid slots are re-zeroed to keep the invariant."""
+        data = jnp.where(self.valid[:, None, None], data, 0.0)
+        return dataclasses.replace(self, data=data)
+
+    # -------------------------------------------------------------- #
+    # constructors (all jit-traceable)
+    # -------------------------------------------------------------- #
+    @classmethod
+    def from_mask(
+        cls,
+        mask: jnp.ndarray,  # (R, C) bool block-topology mask (traced OK)
+        block: tuple,
+        data: jnp.ndarray = None,  # (nnz_max, bm, bn) values for valid slots
+        nnz_max: int = None,
+        dtype=jnp.float32,
+    ) -> "BlockMatrix":
+        """Inspection-free construction from a block-topology mask.
+
+        ``nnz_max`` bounds the number of True cells (static; defaults to
+        the full grid).  Valid blocks come out row-major sorted because
+        ``jnp.nonzero`` scans row-major; padding fills with the
+        (n_block_rows, 0) sentinel.
+        """
+        R, C = mask.shape
+        bm, bn = block
+        nnz_max = int(R * C if nnz_max is None else nnz_max)
+        nnz_max = max(nnz_max, 1)  # zero-size grids break pallas; pad 1 slot
+        rows, cols = jnp.nonzero(
+            mask, size=nnz_max, fill_value=(jnp.int32(R), jnp.int32(0))
+        )
+        rows = rows.astype(jnp.int32)
+        cols = cols.astype(jnp.int32)
+        offsets = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32),
+             jnp.cumsum(mask.sum(axis=1)).astype(jnp.int32)]
+        )
+        if data is None:
+            data = jnp.zeros((nnz_max, bm, bn), dtype)
+        else:
+            data = jnp.where((rows < R)[:, None, None], data, 0.0)
+        return cls((R * bm, C * bn), (bm, bn), data, rows, cols, offsets)
+
+    @classmethod
+    def from_coo(
+        cls,
+        shape: tuple,
+        block: tuple,
+        data: jnp.ndarray,
+        rows: jnp.ndarray,
+        cols: jnp.ndarray,
+    ) -> "BlockMatrix":
+        """Assemble from already-sorted COO block coordinates (invalid
+        slots marked with ``rows == n_block_rows``); recomputes offsets."""
+        R = shape[0] // block[0]
+        valid = rows < R
+        counts = jnp.bincount(jnp.where(valid, rows, R), length=R + 1)[:R]
+        offsets = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)]
+        )
+        data = jnp.where(valid[:, None, None], data, 0.0)
+        return cls(
+            tuple(shape), tuple(block), data,
+            rows.astype(jnp.int32), cols.astype(jnp.int32), offsets,
+        )
+
+    @classmethod
+    def from_dense(
+        cls, x: jnp.ndarray, block: tuple, nnz_max: int = None
+    ) -> "BlockMatrix":
+        """Blockify a dense matrix, keeping blocks with any nonzero.
+        With traced ``x`` this needs an explicit ``nnz_max`` bound to stay
+        shape-static (defaults to the full grid)."""
+        M, N = x.shape
+        bm, bn = block
+        assert M % bm == 0 and N % bn == 0, "dims must be block-aligned"
+        blocks = x.reshape(M // bm, bm, N // bn, bn).transpose(0, 2, 1, 3)
+        mask = jnp.any(blocks != 0, axis=(2, 3))
+        sp = cls.from_mask(mask, block, nnz_max=nnz_max, dtype=x.dtype)
+        rc = jnp.minimum(sp.row_indices, M // bm - 1)
+        cc = jnp.minimum(sp.column_indices, N // bn - 1)
+        return sp.with_data(blocks[rc, cc])
+
+    @classmethod
+    def from_pattern(cls, pattern, tiles: jnp.ndarray) -> "BlockMatrix":
+        """From a static ``sparse.linear.BlockPattern`` (host-side tile
+        coordinates, already row-major sorted) — zero padding slots, so
+        ``tiles`` maps 1:1 onto ``data``."""
+        rows = jnp.asarray(np.asarray(pattern.rows, dtype=np.int32))
+        cols = jnp.asarray(np.asarray(pattern.cols, dtype=np.int32))
+        return cls.from_coo(
+            (pattern.d_in, pattern.d_out), (pattern.tm, pattern.tk),
+            tiles, rows, cols,
+        )
+
+    # -------------------------------------------------------------- #
+    def transpose(self) -> "BlockMatrix":
+        """(N, M) view: swap block coordinates, restore row-sorted order
+        (stable argsort keeps column order within a row)."""
+        R = self.n_block_rows
+        C = self.n_block_cols
+        new_rows = jnp.where(self.valid, self.column_indices, C)
+        new_cols = jnp.where(self.valid, self.row_indices, 0)
+        order = jnp.argsort(new_rows, stable=True)
+        return BlockMatrix.from_coo(
+            (self.shape[1], self.shape[0]),
+            (self.block[1], self.block[0]),
+            jnp.transpose(self.data, (0, 2, 1))[order],
+            new_rows[order],
+            new_cols[order],
+        )
+
+    def to_dense(self) -> jnp.ndarray:
+        """Scatter blocks back to (M, N); invalid slots drop."""
+        R, C = self.n_block_rows, self.n_block_cols
+        bm, bn = self.block
+        grid = jnp.zeros((R, C, bm, bn), self.data.dtype)
+        grid = grid.at[self.row_indices, self.column_indices].add(
+            self.data, mode="drop"
+        )
+        return grid.transpose(0, 2, 1, 3).reshape(self.shape)
+
+    def block_mask(self) -> jnp.ndarray:
+        """(R, C) bool topology mask (the ``from_mask`` inverse)."""
+        R, C = self.n_block_rows, self.n_block_cols
+        m = jnp.zeros((R, C), bool)
+        return m.at[self.row_indices, self.column_indices].set(
+            True, mode="drop"
+        )
+
+    def density(self) -> jnp.ndarray:
+        return self.n_blocks / max(self.n_block_rows * self.n_block_cols, 1)
+
+
+def mask_from_dense(x: jnp.ndarray, block: tuple) -> jnp.ndarray:
+    """(R, C) bool mask of blocks with any nonzero entry."""
+    M, N = x.shape
+    bm, bn = block
+    blocks = x.reshape(M // bm, bm, N // bn, bn)
+    return jnp.any(blocks != 0, axis=(1, 3))
+
+
+def topology_from_mask(mask, block, nnz_max=None) -> BlockMatrix:
+    """Shorthand for a data-less topology (the ``sdd`` third argument)."""
+    return BlockMatrix.from_mask(mask, block, nnz_max=nnz_max)

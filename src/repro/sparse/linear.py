@@ -122,16 +122,27 @@ def pack_dense(w: jnp.ndarray, pattern: BlockPattern) -> jnp.ndarray:
     return blocks[np.asarray(pattern.rows), np.asarray(pattern.cols)]
 
 
+def _as_block_matrix(tiles: jnp.ndarray, pattern: BlockPattern):
+    """View (pattern, tiles) as a fixed-block ``BlockMatrix`` — the static
+    patterns of this module are just the slow-changing corner of the
+    blocked-CSR-COO format (same row-major slot order, no padding)."""
+    from .block_csr import BlockMatrix
+
+    return BlockMatrix.from_pattern(pattern, tiles)
+
+
 def sparse_matmul(x: jnp.ndarray, tiles: jnp.ndarray, pattern: BlockPattern):
-    """y[..., d_out] = x[..., d_in] @ W_sparse.  Grouped-einsum backend:
-    gather input tile-rows, batched tile matmul, scatter-add output cols.
-    FLOPs = density * dense FLOPs."""
-    rg = jnp.asarray(pattern.row_gather())  # (nt, tm)
-    cg = jnp.asarray(pattern.col_gather())  # (nt, tk)
-    xg = x[..., rg]  # (..., nt, tm)
-    part = jnp.einsum("...nm,nmk->...nk", xg, tiles)
-    y = jnp.zeros(x.shape[:-1] + (pattern.d_out,), dtype=part.dtype)
-    return y.at[..., cg].add(part)
+    """y[..., d_out] = x[..., d_in] @ W_sparse — the ``dds`` member of the
+    ``kernels.bsr_ops`` op family with the grouped-einsum backend (gather
+    input tile-rows, batched tile matmul, scatter-add output cols).
+    FLOPs = density * dense FLOPs; grads come from the family's
+    ``custom_vjp`` (``d(dds)/d(sparse) = sdd``)."""
+    from ..kernels.bsr_ops import dds
+
+    lead = x.shape[:-1]
+    y = dds(x.reshape(-1, pattern.d_in), _as_block_matrix(tiles, pattern),
+            backend="grouped")
+    return y.reshape(*lead, pattern.d_out)
 
 
 def sparse_matmul_pallas(
@@ -197,25 +208,59 @@ _pallas_matmul_ad.defvjp(_pallas_matmul_fwd, _pallas_matmul_bwd)
 # ---------------------------------------------------------------------- #
 # Plan-driven strategy selection (shares core.cache with the autotuner)
 # ---------------------------------------------------------------------- #
+def _fixed_block_matmul(x: jnp.ndarray, tiles: jnp.ndarray,
+                        pattern: BlockPattern):
+    """Inspection-free strategy: route through the fixed-block op family
+    (``kernels.bsr_ops.dds``, auto backend — pallas on TPU).  Used when
+    the structure-change-rate arbiter decides the pattern churns too fast
+    for staging/plan-caching to amortize."""
+    from ..kernels.bsr_ops import dds
+
+    lead = x.shape[:-1]
+    y = dds(x.reshape(-1, pattern.d_in), _as_block_matrix(tiles, pattern))
+    return y.reshape(*lead, pattern.d_out)
+
+
 _MATMUL_IMPLS = {
     "grouped": sparse_matmul,
     "pallas": lambda x, tiles, pattern: _pallas_matmul_ad(pattern, x, tiles),
+    "fixed_block": _fixed_block_matmul,
 }
-# pattern hash -> strategy name, resolved once per process (trace-safe)
+# (pattern hash, device) -> strategy name, resolved once per process
+# (trace-safe).  The device is part of the key: the on-disk plan_key is
+# device-specific, and a process whose default backend flips (cpu<->tpu
+# test harnesses) must not replay the other backend's winner.
 _STRATEGY_REGISTRY: dict[str, str] = {}
+
+# bump when the hash *inputs* change so stale plan-cache entries keyed by
+# the old hash miss instead of aliasing (v2: raw coordinate bytes — the
+# v1 repr() of numpy coordinate arrays elided large patterns with "...",
+# collapsing distinct >1k-tile patterns onto one key)
+_PATTERN_HASH_VERSION = b"blockpattern-v2"
 
 
 def pattern_hash(pattern: BlockPattern) -> str:
-    """Structure hash of a BlockPattern (tile coords are the structure)."""
+    """Structure hash of a BlockPattern (tile coords are the structure).
+
+    Coordinates are canonicalized to int64 and hashed as raw bytes plus
+    their shapes, so tuple- and ndarray-carrying patterns agree and large
+    patterns never alias (numpy ``repr`` elision truncated them in v1).
+    """
     import hashlib
 
+    rows = np.asarray(pattern.rows, dtype=np.int64)
+    cols = np.asarray(pattern.cols, dtype=np.int64)
     h = hashlib.sha256()
+    h.update(_PATTERN_HASH_VERSION)
     h.update(
-        repr(
-            (pattern.d_in, pattern.d_out, pattern.tm, pattern.tk,
-             pattern.rows, pattern.cols)
-        ).encode()
+        np.asarray(
+            [pattern.d_in, pattern.d_out, pattern.tm, pattern.tk,
+             rows.size, cols.size],
+            dtype=np.int64,
+        ).tobytes()
     )
+    h.update(rows.tobytes())
+    h.update(cols.tobytes())
     return h.hexdigest()[:16]
 
 
@@ -227,6 +272,7 @@ def choose_matmul_strategy(
     warmup: int = 1,
     iters: int = 3,
     shard=None,
+    family: str = None,
 ) -> str:
     """Measured (or cached) choice between the grouped-einsum and Pallas
     sparse-matmul strategies for one pattern — the ``sparse.linear``
@@ -239,16 +285,31 @@ def choose_matmul_strategy(
 
     On CPU the Pallas kernel only runs in interpret mode and can never win,
     so the candidate set collapses to ``grouped`` and no benchmark runs.
+
+    With ``family=`` the structure-change-rate arbiter
+    (``core.autotune.choose_format``) sees this pattern first: a family
+    whose observed structure churns per call gets the inspection-free
+    ``fixed_block`` strategy immediately — no benchmark, no registry or
+    plan-cache write, since caching per-structure plans for a structure
+    that never repeats only pollutes the cache.  Slow-changing families
+    fall through to the staged (measured/cached) path below.
     """
     from ..core import cache as cachelib
     from ..core.staging import StagingOptions
 
     phash = pattern_hash(pattern)
-    reg_key = phash if shard is None else f"{phash}@s{shard[0]}of{shard[1]}"
+    if family is not None:
+        from ..core.autotune import choose_format
+
+        if choose_format(family, phash) == "fixed_block":
+            return "fixed_block"
+    device = jax.default_backend()
+    reg_key = f"{phash}@{device}" if shard is None else (
+        f"{phash}@{device}@s{shard[0]}of{shard[1]}"
+    )
     found = _STRATEGY_REGISTRY.get(reg_key)
     if found is not None:
         return found
-    device = jax.default_backend()
     key = cachelib.plan_key(
         "linear", phash, device,
         shard_id=None if shard is None else shard[0],
@@ -323,11 +384,11 @@ def _seed_shard_strategy(pattern: BlockPattern, shard, strategy: str,
     from ..core.staging import StagingOptions
 
     phash = pattern_hash(pattern)
-    reg_key = f"{phash}@s{shard[0]}of{shard[1]}"
+    device = jax.default_backend()
+    reg_key = f"{phash}@{device}@s{shard[0]}of{shard[1]}"
     found = _STRATEGY_REGISTRY.get(reg_key)
     if found is not None:
         return found
-    device = jax.default_backend()
     key = cachelib.plan_key("linear", phash, device,
                             shard_id=shard[0], num_shards=shard[1])
     store = cache if cache is not None else cachelib.default_cache()
@@ -383,7 +444,7 @@ def warm_matmul_plans(patterns, batch: int = 8, cache=None, mesh=None,
 
 def sparse_matmul_auto(x: jnp.ndarray, tiles: jnp.ndarray,
                        pattern: BlockPattern, shard=None, mesh=None,
-                       out_model: bool = False):
+                       out_model: bool = False, family: str = None):
     """Plan-dispatched sparse matmul.  Inside a jit trace an unresolved
     pattern falls back to the device heuristic WITHOUT benchmarking (a
     micro-benchmark mid-trace would compile-thrash); call
@@ -398,7 +459,7 @@ def sparse_matmul_auto(x: jnp.ndarray, tiles: jnp.ndarray,
     """
     tracing = isinstance(x, jax.core.Tracer)
     strategy = choose_matmul_strategy(pattern, allow_bench=not tracing,
-                                      shard=shard)
+                                      shard=shard, family=family)
     y = _MATMUL_IMPLS[strategy](x, tiles, pattern)
     if out_model:
         if mesh is not None:

@@ -1,0 +1,348 @@
+"""Inspection-free block-sparse op family: dsd/dds/sdd CPU-interpret
+parity (forward + grads) vs the dense reference, structural edge cases,
+and the dropless MoE path built on top of them."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # keep deterministic cases running without hypothesis
+    from _hypothesis_stub import given, settings, st
+
+from repro.kernels.bsr_ops import dds, dsd, sdd
+from repro.sparse.block_csr import (
+    BlockMatrix,
+    mask_from_dense,
+    topology_from_mask,
+)
+
+# 'pallas' runs in interpret mode here (CPU tier-1); both must agree with
+# the dense reference to 1e-5
+BACKENDS = ("grouped", "pallas")
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+def _random_sparse(rng, Rb, Cb, bm, bn, density, pad=0):
+    """A BlockMatrix with a random topology plus ``pad`` extra padding
+    slots (data at padding slots is GARBAGE before from_mask zeroes it —
+    ops must never read it)."""
+    mask = rng.random((Rb, Cb)) < density
+    nnz_max = max(int(mask.sum()) + pad, 1)
+    data = rng.standard_normal((nnz_max, bm, bn)).astype(np.float32)
+    sp = BlockMatrix.from_mask(
+        jnp.asarray(mask), (bm, bn), data=jnp.asarray(data), nnz_max=nnz_max
+    )
+    return sp
+
+
+# ---------------------------------------------------------------------- #
+# forward parity
+# ---------------------------------------------------------------------- #
+@settings(max_examples=15, deadline=None)
+@given(
+    Rb=st.sampled_from([1, 2, 3]),
+    Cb=st.sampled_from([1, 2, 4]),
+    bm=st.sampled_from([4, 8]),
+    bn=st.sampled_from([4, 8]),
+    n=st.sampled_from([3, 8]),
+    density=st.floats(0.0, 1.0),
+    pad=st.sampled_from([0, 3]),
+    seed=st.integers(0, 1000),
+)
+def test_dsd_matches_dense(Rb, Cb, bm, bn, n, density, pad, seed):
+    rng = np.random.default_rng(seed)
+    sp = _random_sparse(rng, Rb, Cb, bm, bn, density, pad)
+    x = jnp.asarray(rng.standard_normal((Cb * bn, n)).astype(np.float32))
+    ref = np.asarray(sp.to_dense() @ x)
+    for backend in BACKENDS:
+        y = dsd(sp, x, backend=backend)
+        np.testing.assert_allclose(np.asarray(y), ref, **TOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    Rb=st.sampled_from([1, 2, 3]),
+    Cb=st.sampled_from([1, 2, 4]),
+    bm=st.sampled_from([4, 8]),
+    bn=st.sampled_from([4, 8]),
+    m=st.sampled_from([3, 8]),
+    density=st.floats(0.0, 1.0),
+    pad=st.sampled_from([0, 3]),
+    seed=st.integers(0, 1000),
+)
+def test_dds_matches_dense(Rb, Cb, bm, bn, m, density, pad, seed):
+    rng = np.random.default_rng(seed)
+    sp = _random_sparse(rng, Rb, Cb, bm, bn, density, pad)
+    x = jnp.asarray(rng.standard_normal((m, Rb * bm)).astype(np.float32))
+    ref = np.asarray(x @ sp.to_dense())
+    for backend in BACKENDS:
+        y = dds(x, sp, backend=backend)
+        np.testing.assert_allclose(np.asarray(y), ref, **TOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    Rb=st.sampled_from([1, 2, 3]),
+    Cb=st.sampled_from([1, 2, 4]),
+    bm=st.sampled_from([4, 8]),
+    bn=st.sampled_from([4, 8]),
+    k=st.sampled_from([4, 16]),
+    density=st.floats(0.0, 1.0),
+    pad=st.sampled_from([0, 3]),
+    seed=st.integers(0, 1000),
+)
+def test_sdd_matches_dense(Rb, Cb, bm, bn, k, density, pad, seed):
+    rng = np.random.default_rng(seed)
+    mask = rng.random((Rb, Cb)) < density
+    nnz_max = max(int(mask.sum()) + pad, 1)
+    topo = topology_from_mask(jnp.asarray(mask), (bm, bn), nnz_max=nnz_max)
+    a = jnp.asarray(rng.standard_normal((Rb * bm, k)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((k, Cb * bn)).astype(np.float32))
+    keep = np.repeat(np.repeat(mask, bm, 0), bn, 1)
+    ref = np.where(keep, np.asarray(a @ b), 0.0)
+    for backend in BACKENDS:
+        out = sdd(a, b, topo, backend=backend)
+        np.testing.assert_allclose(np.asarray(out.to_dense()), ref, **TOL)
+        # padding slots must come back zero (downstream .data arithmetic)
+        assert not np.any(np.asarray(out.data)[~np.asarray(out.valid)])
+
+
+# ---------------------------------------------------------------------- #
+# gradient parity (the custom_vjp family closure)
+# ---------------------------------------------------------------------- #
+@settings(max_examples=8, deadline=None)
+@given(
+    density=st.floats(0.1, 1.0),
+    backend=st.sampled_from(list(BACKENDS)),
+    seed=st.integers(0, 1000),
+)
+def test_dsd_grads_match_dense(density, backend, seed):
+    rng = np.random.default_rng(seed)
+    sp = _random_sparse(rng, 3, 2, 4, 8, density, pad=2)
+    x = jnp.asarray(rng.standard_normal((16, 5)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((12, 5)).astype(np.float32))
+
+    f = lambda d, x: (dsd(sp.with_data(d), x, backend=backend) * w).sum()
+    ref = lambda d, x: ((sp.with_data(d).to_dense() @ x) * w).sum()
+    gd, gx = jax.grad(f, argnums=(0, 1))(sp.data, x)
+    rd, rx = jax.grad(ref, argnums=(0, 1))(sp.data, x)
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(rd), **TOL)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx), **TOL)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    density=st.floats(0.1, 1.0),
+    backend=st.sampled_from(list(BACKENDS)),
+    seed=st.integers(0, 1000),
+)
+def test_dds_grads_match_dense(density, backend, seed):
+    rng = np.random.default_rng(seed)
+    sp = _random_sparse(rng, 3, 2, 4, 8, density, pad=2)
+    x = jnp.asarray(rng.standard_normal((5, 12)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((5, 16)).astype(np.float32))
+
+    f = lambda x, d: (dds(x, sp.with_data(d), backend=backend) * w).sum()
+    ref = lambda x, d: ((x @ sp.with_data(d).to_dense()) * w).sum()
+    gx, gd = jax.grad(f, argnums=(0, 1))(x, sp.data)
+    rx, rd = jax.grad(ref, argnums=(0, 1))(x, sp.data)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx), **TOL)
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(rd), **TOL)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    density=st.floats(0.1, 1.0),
+    backend=st.sampled_from(list(BACKENDS)),
+    seed=st.integers(0, 1000),
+)
+def test_sdd_grads_match_dense(density, backend, seed):
+    rng = np.random.default_rng(seed)
+    mask = rng.random((3, 2)) < density
+    topo = topology_from_mask(jnp.asarray(mask), (4, 8),
+                              nnz_max=int(mask.sum()) + 2)
+    a = jnp.asarray(rng.standard_normal((12, 5)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((5, 16)).astype(np.float32))
+    w = jnp.asarray(
+        rng.standard_normal(np.asarray(topo.data.shape)).astype(np.float32)
+    )
+    keep = jnp.asarray(np.repeat(np.repeat(mask, 4, 0), 8, 1))
+    # same cotangent, expressed densely for the reference
+    wd = topo.with_data(w).to_dense()
+
+    f = lambda a, b: (sdd(a, b, topo, backend=backend).data * w).sum()
+    ref = lambda a, b: (jnp.where(keep, a @ b, 0.0) * wd).sum()
+    ga, gb = jax.grad(f, argnums=(0, 1))(a, b)
+    ra, rb = jax.grad(ref, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(ra), **TOL)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(rb), **TOL)
+
+
+# ---------------------------------------------------------------------- #
+# structural edge cases
+# ---------------------------------------------------------------------- #
+def test_empty_topology():
+    """All-False mask (empty expert / all tokens dropped): every op is a
+    well-defined zero, not an error — the padding slot carries it."""
+    mask = jnp.zeros((2, 3), bool)
+    sp = BlockMatrix.from_mask(mask, (4, 4), nnz_max=2)
+    x = jnp.ones((12, 5))
+    for backend in BACKENDS:
+        assert not np.any(np.asarray(dsd(sp, x, backend=backend)))
+        assert not np.any(np.asarray(dds(jnp.ones((5, 8)), sp,
+                                         backend=backend)))
+        out = sdd(jnp.ones((8, 6)), jnp.ones((6, 12)), sp, backend=backend)
+        assert not np.any(np.asarray(out.data))
+    assert int(sp.n_blocks) == 0
+
+
+def test_single_block():
+    """1x1 block grid — the degenerate smallest topology."""
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((4, 4)).astype(np.float32)
+    sp = BlockMatrix.from_dense(jnp.asarray(a), (4, 4))
+    x = jnp.asarray(rng.standard_normal((4, 3)).astype(np.float32))
+    for backend in BACKENDS:
+        np.testing.assert_allclose(
+            np.asarray(dsd(sp, x, backend=backend)), a @ np.asarray(x), **TOL
+        )
+
+
+def test_empty_block_rows_are_zeroed():
+    """Rows with no blocks must come back exactly zero on every backend
+    (the pallas accumulation schedule never visits them)."""
+    mask = jnp.asarray(np.array([[0, 1], [0, 0], [1, 0]], bool))
+    rng = np.random.default_rng(3)
+    data = jnp.asarray(rng.standard_normal((4, 4, 4)).astype(np.float32))
+    sp = BlockMatrix.from_mask(mask, (4, 4), data=data, nnz_max=4)
+    x = jnp.asarray(rng.standard_normal((8, 6)).astype(np.float32))
+    ref = np.asarray(sp.to_dense() @ x)
+    assert not ref[4:8].any()  # middle block row is empty
+    for backend in BACKENDS:
+        np.testing.assert_allclose(
+            np.asarray(dsd(sp, x, backend=backend)), ref, **TOL
+        )
+
+
+def test_construction_is_traceable():
+    """The inspection-free claim: topology derivation from a TRACED mask
+    works under jit (no host round-trip), and retraces are not needed
+    when only the mask values change."""
+    traces = []
+
+    @jax.jit
+    def f(dense, x):
+        traces.append(None)
+        mask = mask_from_dense(dense, (4, 4))
+        sp = BlockMatrix.from_dense(dense, (4, 4), nnz_max=6)
+        assert isinstance(sp.row_indices, jax.core.Tracer)
+        return dsd(sp, x, backend="grouped"), mask
+
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((8, 3)).astype(np.float32))
+    for seed in (0, 1):
+        r = np.random.default_rng(seed)
+        dense = r.standard_normal((8, 8)).astype(np.float32)
+        dense[r.random((8, 8)) < 0.5] = 0.0
+        blocks = dense.reshape(2, 4, 2, 4)
+        dense = np.where(
+            np.abs(blocks).sum((1, 3), keepdims=True) > 2, blocks, 0.0
+        ).reshape(8, 8)
+        y, _ = f(jnp.asarray(dense), x)
+        np.testing.assert_allclose(np.asarray(y), dense @ np.asarray(x),
+                                   **TOL)
+    assert len(traces) == 1  # same nnz_max bound => no retrace
+
+
+def test_transpose_roundtrip():
+    rng = np.random.default_rng(7)
+    sp = _random_sparse(rng, 3, 4, 4, 8, 0.5, pad=3)
+    np.testing.assert_allclose(
+        np.asarray(sp.transpose().to_dense()), np.asarray(sp.to_dense()).T
+    )
+    np.testing.assert_allclose(
+        np.asarray(sp.transpose().transpose().to_dense()),
+        np.asarray(sp.to_dense()),
+    )
+
+
+# ---------------------------------------------------------------------- #
+# dropless MoE on top of the family
+# ---------------------------------------------------------------------- #
+def _moe_cfg(dropless, ffn_type="swiglu", capacity_factor=16.0):
+    from repro.models.config import (
+        LayerSpec,
+        ModelConfig,
+        MoEConfig,
+        uniform_groups,
+    )
+
+    moe = MoEConfig(
+        num_experts=4, top_k=2, d_ff=32, capacity_factor=capacity_factor,
+        dropless=dropless, dropless_block=8,
+    )
+    return ModelConfig(
+        name="t", family="moe", d_model=16, n_heads=2, n_kv_heads=2,
+        head_dim=8, d_ff=32, vocab_size=64,
+        groups=uniform_groups(1, LayerSpec(ffn="moe")),
+        ffn_type=ffn_type, moe=moe,
+    )
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    ffn_type=st.sampled_from(["swiglu", "relu2"]),
+    seed=st.integers(0, 100),
+)
+def test_dropless_moe_matches_capacity_path(ffn_type, seed):
+    """The dropless (block-sparse FFN) path must match the capacity-buffer
+    path exactly on undropped tokens; capacity_factor=16 means the
+    reference drops nothing, so every token must agree — forward, aux
+    loss, and grads."""
+    from repro.models.moe import moe_apply, moe_init
+
+    cfg_d = _moe_cfg(True, ffn_type)
+    cfg_c = _moe_cfg(False, ffn_type)
+    p = moe_init(jax.random.PRNGKey(seed), cfg_d)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, 12, 16))
+    yd, ad = jax.jit(lambda p, x: moe_apply(p, x, cfg_d))(p, x)
+    yc, ac = moe_apply(p, x, cfg_c)
+    np.testing.assert_allclose(np.asarray(yd), np.asarray(yc), **TOL)
+    np.testing.assert_allclose(float(ad), float(ac), rtol=1e-6)
+
+    gd = jax.grad(lambda p: moe_apply(p, x, cfg_d)[0].sum())(p)
+    gc = jax.grad(lambda p: moe_apply(p, x, cfg_c)[0].sum())(p)
+    for k in gd:
+        np.testing.assert_allclose(
+            np.asarray(gd[k]), np.asarray(gc[k]), rtol=1e-4, atol=1e-4
+        )
+
+
+def test_dropless_moe_decode_shape():
+    """S == 1 decode (single global group) through the dropless path."""
+    from repro.models.moe import moe_apply, moe_init
+
+    cfg_d, cfg_c = _moe_cfg(True), _moe_cfg(False)
+    p = moe_init(jax.random.PRNGKey(0), cfg_d)
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 1, 16))
+    yd, _ = jax.jit(lambda p, x: moe_apply(p, x, cfg_d))(p, x)
+    yc, _ = moe_apply(p, x, cfg_c)
+    np.testing.assert_allclose(np.asarray(yd), np.asarray(yc), **TOL)
+
+
+def test_dropless_moe_empty_experts():
+    """A router biased so some experts receive zero tokens: their FFN
+    blocks are absent from the topology and contribute nothing."""
+    from repro.models.moe import moe_apply, moe_init
+
+    cfg_d, cfg_c = _moe_cfg(True), _moe_cfg(False)
+    p = dict(moe_init(jax.random.PRNGKey(0), cfg_d))
+    # route everything to experts {0, 1}: experts 2 and 3 stay empty
+    router = np.zeros((16, 4), np.float32)
+    router[:, 2:] = -1e9
+    p["router"] = jnp.asarray(router)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 12, 16))
+    yd, _ = moe_apply(p, x, cfg_d)
+    yc, _ = moe_apply(p, x, cfg_c)
+    np.testing.assert_allclose(np.asarray(yd), np.asarray(yc), **TOL)

@@ -54,6 +54,41 @@ def test_encdec_generation():
     assert bool((np.asarray(out) >= 0).all())
 
 
+def test_encdec_serve_falls_back_with_warning():
+    """serve() on an enc-dec config can't use the paged scheduler; the
+    fallback must be EXPLICIT: a warning (once per process) naming the
+    reason, ``paged: False`` surfaced in warmup_stats, and results that
+    match the generate() reference token-for-token."""
+    import pytest
+
+    import repro.serve.engine as engine_mod
+
+    cfg = get_config("seamless-m4t-large-v2", reduced=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_len=16)
+    prompt = np.array([1, 2, 3], np.int32)
+    src = jax.random.normal(jax.random.PRNGKey(4), (8, cfg.frontend_dim))
+    reqs = [{"prompt": prompt, "max_new_tokens": 5, "src_embeds": src,
+             "rid": "e0"}]
+    engine_mod._ENCDEC_FALLBACK_WARNED = False  # re-arm the once-guard
+    with pytest.warns(UserWarning, match="paged"):
+        results, sched = eng.serve(reqs)
+    assert sched is None
+    assert eng.warmup_stats["paged"] is False
+    assert results["e0"]["state"] == "FINISHED"
+    assert results["e0"]["prompt_len"] == 3
+    assert results["e0"]["metrics"]["fallback"] == "generate"
+    ref, _ = eng.generate(jnp.asarray(prompt)[None], 5, src_embeds=src[None])
+    np.testing.assert_array_equal(results["e0"]["tokens"], np.asarray(ref[0]))
+    # warn-once: a second serve() does not warn again
+    import warnings
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        eng.serve(reqs)
+    assert not caught
+
+
 def test_temperature_sampling_runs():
     cfg = get_config("mamba2-1.3b", reduced=True)
     params = init_params(cfg, jax.random.PRNGKey(0))

@@ -1,5 +1,6 @@
 """SABLE block-sparse NN weights: patterns, matmuls, pruning."""
 import numpy as np
+import jax
 import jax.numpy as jnp
 try:
     from hypothesis import given, settings, strategies as st
@@ -7,7 +8,10 @@ except ImportError:  # keep deterministic cases running without hypothesis
     from _hypothesis_stub import given, settings, st
 
 from repro.sparse.linear import (
+    BlockPattern,
+    choose_matmul_strategy,
     pack_dense,
+    pattern_hash,
     prune_dense,
     random_pattern,
     sparse_matmul,
@@ -68,6 +72,102 @@ def test_pack_dense_roundtrip():
     tiles = rng.standard_normal((pat.n_tiles, 8, 8)).astype(np.float32)
     w = _dense_of(pat, tiles)
     np.testing.assert_allclose(np.asarray(pack_dense(jnp.asarray(w), pat)), tiles)
+
+
+def test_pattern_hash_no_elision_collision():
+    """Regression: v1 hashed ``repr()`` of the coordinate arrays, which
+    numpy elides past ~1k elements — two large patterns differing only in
+    the elided middle collapsed onto one plan-cache key.  v2 hashes the
+    raw coordinate bytes, so they must differ."""
+    R = C = 40  # 1600 tiles > the repr elision threshold
+    rows = np.repeat(np.arange(R), C)
+    cols = np.tile(np.arange(C), R)
+    cols2 = cols.copy()
+    mid = len(cols2) // 2
+    cols2[mid], cols2[mid + 1] = cols2[mid + 1], cols2[mid]  # elided region
+    p1 = BlockPattern(R * 4, C * 4, 4, 4, rows, cols)
+    p2 = BlockPattern(R * 4, C * 4, 4, 4, rows, cols2)
+    assert repr(p1.cols).count("...")  # precondition: repr really elides
+    assert pattern_hash(p1) != pattern_hash(p2)
+    # canonicalization: tuple- and ndarray-carrying patterns agree
+    p3 = BlockPattern(R * 4, C * 4, 4, 4, tuple(rows), tuple(cols))
+    assert pattern_hash(p1) == pattern_hash(p3)
+
+
+def test_strategy_registry_keys_include_device(tmp_path, monkeypatch):
+    """Regression: the in-process strategy registry was keyed by pattern
+    hash alone, so a 'pallas' winner resolved under one backend leaked
+    into processes/phases running another backend.  A plan loaded under a
+    monkeypatched 'tpu' backend must not be replayed once the backend is
+    'cpu' again."""
+    from repro.core import cache as cachelib
+    from repro.core.staging import StagingOptions
+
+    pat = random_pattern(32, 32, 8, 8, 0.5, seed=0)
+    store = cachelib.PlanCache(str(tmp_path))
+    h = pattern_hash(pat)
+    store.store_plan(
+        cachelib.plan_key("linear", h, "tpu"),
+        cachelib.TuningPlan(
+            kind="linear", structure_hash=h,
+            options=StagingOptions(backend="pallas", tile=(8, 8)),
+            device="tpu", source="measured",
+        ),
+    )
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    got = choose_matmul_strategy(pat, cache=store, allow_bench=False)
+    assert got == "pallas"  # the fake-TPU plan loads
+    monkeypatch.undo()
+    got = choose_matmul_strategy(pat, cache=store, allow_bench=False)
+    assert got != "pallas"  # must re-resolve for the real backend
+
+
+def test_family_churn_takes_fixed_block_without_caching(tmp_path):
+    """Per-batch structure churn: after enough distinct hashes in one
+    family the arbiter returns the inspection-free strategy and stops
+    touching the registry and the plan cache (a never-repeating structure
+    must not pollute either)."""
+    from repro.core import cache as cachelib
+    from repro.core.autotune import reset_structure_trackers
+    from repro.sparse import linear as linmod
+
+    reset_structure_trackers()
+    store = cachelib.PlanCache(str(tmp_path))
+    pats = [random_pattern(32, 32, 8, 8, 0.5, seed=s) for s in range(8)]
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((4, 32)).astype(np.float32))
+    seen = []
+    for pat in pats:
+        before = store.stats()["plans"]
+        strat = choose_matmul_strategy(pat, cache=store, allow_bench=False,
+                                       family="churny")
+        seen.append(strat)
+        if strat == "fixed_block":  # arbiter short-circuit: no cache write
+            assert store.stats()["plans"] == before
+    assert seen[-1] == "fixed_block"
+    fixed = [p for p, s in zip(pats, seen) if s == "fixed_block"]
+    assert fixed and all(
+        f"{pattern_hash(p)}@{jax.default_backend()}"
+        not in linmod._STRATEGY_REGISTRY
+        for p in fixed
+    )
+    # the chosen impl is numerically the same matmul
+    pat = fixed[-1]
+    tiles = jnp.asarray(
+        rng.standard_normal((pat.n_tiles, 8, 8)).astype(np.float32)
+    )
+    y = linmod._MATMUL_IMPLS["fixed_block"](x, tiles, pat)
+    ref = sparse_matmul(x, tiles, pat)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-5,
+                               atol=1e-5)
+    # a STATIC family (same hash every call) keeps the staged path
+    reset_structure_trackers()
+    static = [
+        choose_matmul_strategy(pats[0], cache=store, allow_bench=False,
+                               family="static")
+        for _ in range(8)
+    ]
+    assert "fixed_block" not in static
 
 
 def test_pallas_path_matches_grouped():
