@@ -22,6 +22,7 @@ import traceback
 from . import (
     bench_autotune,
     bench_codegen_variants,
+    bench_cost_model,
     bench_inspection,
     bench_mesh2d,
     bench_moe,
@@ -48,9 +49,10 @@ SUITES = {
     "mesh2d": bench_mesh2d.main,  # ISSUE 5: (shards x model) factorizations
     "serving": bench_serving.main,  # ISSUE 6: continuous-batching traffic
     "moe": bench_moe.main,  # ISSUE 7: dense-capacity vs dropless FFN
+    "cost_model": bench_cost_model.main,  # ISSUE 8: predict vs measure
 }
 
-SMOKE_SUITES = ("spmv", "sharded", "mesh2d", "serving", "moe")
+SMOKE_SUITES = ("spmv", "sharded", "mesh2d", "serving", "moe", "cost_model")
 
 
 def main() -> None:

@@ -25,3 +25,4 @@ from .autotune import (
     reset_autotune_stats,
     tune_num_workers,
 )
+from .cost_model import CostModel, cost_model_stats, load_or_fit, reset_cost_model_stats

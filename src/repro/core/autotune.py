@@ -27,6 +27,12 @@ Candidate space (gated by structure + device):
 
 plus the best ``partition_block_rows`` worker split (Section IV-D), chosen
 analytically from the block-size histogram rather than timed.
+
+At production cardinality even one measurement pass per structure is too
+slow; ``autotune(mode="predict")`` ranks the candidates with the learned
+cost model fit over the plan-cache corpus (``core/cost_model.py``) and
+only measures when the model is uncertain — see that module and
+docs/tuning.md for the calibration contract.
 """
 from __future__ import annotations
 
@@ -66,7 +72,14 @@ HYBRID_THRESHOLD = 0.5
 WORKER_CANDIDATES = (1, 2, 4, 8, 16)
 MIN_PARALLEL_EFFICIENCY = 0.75
 
-_STATS = {"cache_hits": 0, "cache_misses": 0, "plans_tuned": 0, "benchmarks": 0}
+_STATS = {
+    "cache_hits": 0,
+    "cache_misses": 0,
+    "plans_tuned": 0,
+    "benchmarks": 0,
+    "plans_predicted": 0,
+    "predict_fallbacks": 0,
+}
 
 
 def autotune_stats() -> dict:
@@ -267,6 +280,12 @@ def _bench_inputs(vbr: vbrlib.VBR, kind: str, n_cols: Optional[int]):
 
 
 def _structure_meta(vbr: vbrlib.VBR) -> dict:
+    """Structure summary recorded on every plan.  The block-size moments
+    feed the cost model (core/cost_model.py) — they are what separates a
+    few-large-blocks structure from a many-tiny-blocks one at equal nnz,
+    which is exactly where backend winners diverge."""
+    sizes = np.asarray([t.size for t in vbr.blocks()], dtype=np.int64)
+    mean = float(sizes.mean()) if sizes.size else 0.0
     return {
         "shape": [int(s) for s in vbr.shape],
         "num_blocks": int(vbr.num_blocks),
@@ -274,6 +293,10 @@ def _structure_meta(vbr: vbrlib.VBR) -> dict:
         "num_block_cols": int(vbr.num_block_cols),
         "stored_nnz": int(vbr.stored_nnz),
         "density": float(vbr.density()),
+        "block_size_mean": mean,
+        "block_size_min": int(sizes.min()) if sizes.size else 0,
+        "block_size_max": int(sizes.max()) if sizes.size else 0,
+        "block_size_cv": float(sizes.std() / mean) if mean else 0.0,
     }
 
 
@@ -285,6 +308,10 @@ def autotune(
     kind: str = "spmv",
     n_cols: Optional[int] = None,
     *,
+    mode: str = "measure",
+    cost_model=None,
+    predict_margin: Optional[float] = None,
+    predict_max_distance: Optional[float] = None,
     value_hints: Optional[np.ndarray] = None,
     cache: Optional[PlanCache] = None,
     use_cache: bool = True,
@@ -294,18 +321,30 @@ def autotune(
     include_gather: bool = False,
     max_unrolled_blocks: int = MAX_UNROLLED_BLOCKS,
 ) -> TuningPlan:
-    """Return the measured-best :class:`TuningPlan` for ``(kind, vbr)``.
+    """Return the best :class:`TuningPlan` for ``(kind, vbr)``.
 
     Warm path: the plan is loaded from the persistent cache and **no**
-    kernel is staged or benchmarked.  Cold path: every candidate from
-    :func:`candidate_options` is staged and timed; the winner (and every
-    candidate's timing, for later inspection) is persisted along with the
-    structure's indirection arrays.
-    """
+    kernel is staged or benchmarked.  Cold path with ``mode="measure"``
+    (default): every candidate from :func:`candidate_options` is staged
+    and timed; the winner (and every candidate's timing, for later
+    inspection) is persisted along with the structure's indirection
+    arrays.
+
+    ``mode="predict"`` consults the learned cost model fit over the
+    plan-cache corpus (``core/cost_model.py``) first: when the model is
+    confident — every candidate known, the feature vector in-corpus, and
+    a clear predicted margin between the top two candidates — the plan is
+    built from *predicted* timings (``source="predicted"``) with ZERO
+    micro-benchmarks.  Otherwise it falls back to measurement (never
+    guessing), and the measured plan lands back in the corpus so the
+    model improves online.  ``cost_model=`` pins a pre-loaded model
+    (batch warmers fit once, predict many)."""
     if kind not in ("spmv", "spmm"):
         raise ValueError(f"unknown kind {kind!r}")
     if kind == "spmm" and n_cols is None:
         raise ValueError("spmm autotune needs n_cols")
+    if mode not in ("measure", "predict"):
+        raise ValueError(f"unknown autotune mode {mode!r}")
     device = jax.default_backend()
     shash = vbrlib.structure_hash(vbr)
     key = plan_key(kind, shash, device, n_cols)
@@ -318,17 +357,68 @@ def autotune(
             return plan
         _STATS["cache_misses"] += 1
 
-    hints = value_hints if value_hints is not None else vbr.val
-    val, x = _bench_inputs(vbr, kind, n_cols)
-    timings: dict[str, float] = {}
-    best_label, best_opts, best_t = None, None, float("inf")
-    for label, opts in candidate_options(
+    cands = candidate_options(
         vbr,
         device=device,
         include_pallas=include_pallas,
         include_gather=include_gather,
         max_unrolled_blocks=max_unrolled_blocks,
-    ):
+    )
+
+    if mode == "predict":
+        from . import cost_model as cmlib
+
+        model = (
+            cost_model
+            if cost_model is not None
+            else cmlib.load_or_fit(cache, device, kind)
+        )
+        if model is not None:
+            meta = _structure_meta(vbr)
+            feats = cmlib.meta_features(kind, meta, n_cols)
+            labels = [lbl for lbl, _ in cands]
+            ok, _why = model.confident(
+                feats,
+                labels,
+                margin=(
+                    cmlib.DEFAULT_MARGIN
+                    if predict_margin is None
+                    else predict_margin
+                ),
+                max_distance=(
+                    cmlib.DEFAULT_MAX_DISTANCE
+                    if predict_max_distance is None
+                    else predict_max_distance
+                ),
+            )
+            if ok:
+                preds = model.predict(feats, labels)
+                best_label = min(preds, key=preds.get)
+                plan = TuningPlan(
+                    kind=kind,
+                    structure_hash=shash,
+                    options=dict(cands)[best_label],
+                    n_cols=n_cols,
+                    device=device,
+                    timings=preds,  # estimates, NOT measurements
+                    num_workers=tune_num_workers(vbr),
+                    meta=meta,
+                    source="predicted",
+                )
+                _STATS["plans_predicted"] += 1
+                cmlib._STATS["plans_predicted"] += 1
+                if use_cache:
+                    cache.store_plan(key, plan)
+                    cache.store_structure(vbr)
+                return plan
+        _STATS["predict_fallbacks"] += 1
+        cmlib._STATS["predict_fallbacks"] += 1
+
+    hints = value_hints if value_hints is not None else vbr.val
+    val, x = _bench_inputs(vbr, kind, n_cols)
+    timings: dict[str, float] = {}
+    best_label, best_opts, best_t = None, None, float("inf")
+    for label, opts in cands:
         try:
             kern = staginglib._cached(kind, vbr, opts, hints, n_cols=n_cols)
             t = measure(kern, val, x, warmup=warmup, iters=iters)

@@ -12,6 +12,8 @@ Layout (under ``$REPRO_CACHE_DIR`` or ``~/.cache/repro-sable``)::
 
     plans/<key>.json        winning StagingOptions + measured timings
     structures/<hash>.npz   the VBR indirection arrays (never ``val``)
+    models/<key>.json       fitted cost models (core/cost_model.py), keyed
+                            by (kind, device, model version)
 
 Plan JSON schema (version 1)::
 
@@ -25,8 +27,13 @@ Plan JSON schema (version 1)::
       "timings": {"<candidate label>": seconds, ...},
       "num_workers": int,                   # best partition_block_rows split
       "meta": {"shape": [m, k], "num_blocks": int, "stored_nnz": int, ...},
-      "source": "measured" | "heuristic"
+      "source": "measured" | "heuristic" | "predicted" | "inherited"
     }
+
+``source`` provenance: ``measured`` plans carry micro-benchmark timings
+and are the cost-model training corpus; ``predicted`` plans carry the
+cost model's runtime *estimates* (never trained on — no feedback loop);
+``heuristic``/``inherited`` plans carry no timings worth learning from.
 
 Values are NEVER cached — only structure, exactly the paper's split of
 staging-time structure vs runtime data.
@@ -225,6 +232,44 @@ class PlanCache:
     def has_plan(self, key: str) -> bool:
         return os.path.exists(self._plan_path(key))
 
+    def iter_plans(self, device: Optional[str] = None, kind: Optional[str] = None):
+        """Yield every parseable cached plan, optionally filtered by
+        device and kind — the cost-model training corpus walks this."""
+        d = os.path.join(self.root, "plans")
+        if not os.path.isdir(d):
+            return
+        for name in sorted(os.listdir(d)):
+            if not name.endswith(".json"):
+                continue
+            plan = self.load_plan(name[: -len(".json")])
+            if plan is None:
+                continue
+            if device is not None and plan.device != device:
+                continue
+            if kind is not None and plan.kind != kind:
+                continue
+            yield plan
+
+    # ------------------------------------------------------------------ #
+    # fitted cost models (core/cost_model.py)
+    # ------------------------------------------------------------------ #
+    def _model_path(self, key: str) -> str:
+        return os.path.join(self.root, "models", f"{key}.json")
+
+    def store_model(self, key: str, doc: dict) -> str:
+        path = self._model_path(key)
+        self._atomic_write(path, json.dumps(doc, sort_keys=True).encode())
+        return path
+
+    def load_model(self, key: str) -> Optional[dict]:
+        try:
+            with open(self._model_path(key), "rb") as f:
+                return json.load(f)
+        except FileNotFoundError:
+            return None
+        except (ValueError, json.JSONDecodeError):
+            return None  # corrupt entry: treat as a miss, refit replaces it
+
     # ------------------------------------------------------------------ #
     # structures (indirection arrays only — never val)
     # ------------------------------------------------------------------ #
@@ -268,7 +313,7 @@ class PlanCache:
     def clear(self) -> int:
         """Remove every cached plan/structure; returns #files removed."""
         n = 0
-        for sub in ("plans", "structures"):
+        for sub in ("plans", "structures", "models"):
             d = os.path.join(self.root, sub)
             if not os.path.isdir(d):
                 continue
@@ -279,8 +324,12 @@ class PlanCache:
         return n
 
     def stats(self) -> dict:
-        out = {"root": self.root, "plans": 0, "structures": 0}
-        for sub, ext in (("plans", ".json"), ("structures", ".npz")):
+        out = {"root": self.root, "plans": 0, "structures": 0, "models": 0}
+        for sub, ext in (
+            ("plans", ".json"),
+            ("structures", ".npz"),
+            ("models", ".json"),
+        ):
             d = os.path.join(self.root, sub)
             if os.path.isdir(d):
                 out[sub] = sum(1 for f in os.listdir(d) if f.endswith(ext))

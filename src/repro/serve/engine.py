@@ -112,12 +112,16 @@ class ServeEngine:
         enc_len: int = 0,
         autotune_sparse: bool = True,
         mesh=None,
+        tune_mode: str = "measure",
     ):
+        if tune_mode not in ("measure", "predict"):
+            raise ValueError(f"unknown tune_mode {tune_mode!r}")
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.enc_len = enc_len
         self.mesh = mesh
+        self.tune_mode = tune_mode
         self.sparse_plans = {}
         self.patterns = ()
         self.warmup_stats = {"warm_start": True, "plans_staged": 0}
@@ -134,6 +138,8 @@ class ServeEngine:
             from ..models.layers import sable_patterns
             from ..sparse.linear import warm_matmul_plans
 
+            from ..core import cost_model as cmlib
+
             pats = sable_patterns(cfg)
             if _has_sparse_ffn(params, pats):
                 self.patterns = tuple(pats.values())
@@ -144,15 +150,23 @@ class ServeEngine:
                     for k in _pattern_plan_keys(p, mesh)
                 )
                 before = store.stats()["plans"]
+                predicted_before = cmlib.cost_model_stats()["plans_predicted"]
                 # warm-start restarts LOAD every plan (no measuring, no
                 # re-staging — the restart-skips-work contract); a cold
-                # start measures once and persists for the next process
+                # start with tune_mode="measure" measures once and persists
+                # for the next process, while tune_mode="predict" resolves
+                # cold patterns from the learned cost model where it is
+                # confident (measuring only the uncertain ones)
                 self.sparse_plans = warm_matmul_plans(
-                    self.patterns, mesh=mesh
+                    self.patterns, mesh=mesh, mode=tune_mode
                 )
                 self.warmup_stats = {
                     "warm_start": warm_start,
                     "plans_staged": store.stats()["plans"] - before,
+                    "plans_predicted": (
+                        cmlib.cost_model_stats()["plans_predicted"]
+                        - predicted_before
+                    ),
                 }
                 assert not warm_start or self.warmup_stats["plans_staged"] == 0
 

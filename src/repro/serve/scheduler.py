@@ -114,7 +114,15 @@ class ContinuousBatchingScheduler:
     """See module docstring.  ``policy``: "fcfs" (strict arrival order) or
     "warm_first" (plan-warm requests admit ahead of cold ones, with aging:
     a request skipped ``max_skips`` times regains head-of-line priority, so
-    cold requests cannot starve)."""
+    cold requests cannot starve).
+
+    ``cold_cost_scoring=True`` refines warm_first with the learned cost
+    model (``core/cost_model.py``): when no warm request exists, cold
+    requests are admitted cheapest-predicted-staging-cost first (and
+    ``_stage_cold`` stages cheapest first) instead of treating all cold as
+    equal — many cheap structures warm per unit of staging time before one
+    expensive one.  Off by default: scoring changes admission order, and
+    golden transcripts pin the unscored schedule."""
 
     def __init__(
         self,
@@ -128,6 +136,7 @@ class ContinuousBatchingScheduler:
         policy: str = "fcfs",
         cold_stage_budget: int = 1,
         max_skips: int = 4,
+        cold_cost_scoring: bool = False,
         clock=None,
         mesh=None,
         plan_cache=None,
@@ -142,6 +151,8 @@ class ContinuousBatchingScheduler:
         self.policy = policy
         self.cold_stage_budget = int(cold_stage_budget)
         self.max_skips = int(max_skips)
+        self.cold_cost_scoring = bool(cold_cost_scoring)
+        self._stage_cost_model = False  # False = not resolved yet
         self.clock = clock if clock is not None else time.perf_counter
         self.mesh = mesh
         self.plan_cache = plan_cache
@@ -260,6 +271,42 @@ class ContinuousBatchingScheduler:
             for k in self._plan_keys(p)
         )
 
+    # ------------------------------------------------------------------ #
+    # predicted staging cost (cold_cost_scoring)
+    # ------------------------------------------------------------------ #
+    def _cost_model(self):
+        """Lazily resolve the ``linear`` cost model over this scheduler's
+        plan cache; None (no/too-small corpus) degrades scoring to the
+        unscored behavior."""
+        if self._stage_cost_model is False:
+            from ..core import cost_model as cmlib
+
+            self._stage_cost_model = cmlib.load_or_fit(
+                self._store(), jax.default_backend(), "linear"
+            )
+        return self._stage_cost_model
+
+    def _predicted_stage_cost(self, req: Request) -> float:
+        """Predicted seconds to stage this request's still-cold patterns
+        (sum over candidates — measuring times them all).  0.0 when warm;
+        inf for a pattern the model cannot score (most expensive
+        assumption, so scoreable work goes first)."""
+        model = self._cost_model()
+        if model is None:
+            return 0.0
+        from ..core import cost_model as cmlib
+
+        store = self._store()
+        total = 0.0
+        for p in req.patterns:
+            if all(store.has_plan(k) for k in self._plan_keys(p)):
+                continue
+            feats = cmlib.pattern_features(p)
+            if model.nn_distance(feats) > cmlib.DEFAULT_MAX_DISTANCE:
+                return float("inf")
+            total += model.staging_cost(feats)
+        return total
+
     def _stage_cold(self, ev: dict) -> None:
         """Stage up to ``cold_stage_budget`` cold patterns from the queue —
         off the decode path (decode proceeds this same iteration)."""
@@ -274,6 +321,14 @@ class ContinuousBatchingScheduler:
         # staging (fcfs admits cold requests too), but every submitted
         # pattern must end up staged so the next process restarts warm
         pool = list(self.queue) + [r for r in self.lanes if r is not None]
+        if self.cold_cost_scoring:
+            # cheapest predicted staging first: the bounded budget warms
+            # the most structures per scheduler iteration
+            pool = sorted(
+                enumerate(pool),
+                key=lambda ir: (self._predicted_stage_cost(ir[1]), ir[0]),
+            )
+            pool = [r for _, r in pool]
         for req in pool:
             for p in req.patterns:
                 h = pattern_hash(p)
@@ -308,6 +363,15 @@ class ContinuousBatchingScheduler:
                 for o in self.queue[:i]:
                     o.skips += 1
                 return i
+        # every queued request is cold: score by predicted staging cost
+        # (cheapest first) when enabled, else strict arrival order
+        if self.cold_cost_scoring and len(self.queue) > 1:
+            costs = [self._predicted_stage_cost(r) for r in self.queue]
+            i = min(range(len(costs)), key=lambda j: (costs[j], j))
+            if i > 0:
+                for o in self.queue[:i]:
+                    o.skips += 1
+            return i
         return 0
 
     def _admit(self, now: float, ev: dict) -> None:

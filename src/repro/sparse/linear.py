@@ -273,6 +273,8 @@ def choose_matmul_strategy(
     iters: int = 3,
     shard=None,
     family: str = None,
+    mode: str = "measure",
+    cost_model=None,
 ) -> str:
     """Measured (or cached) choice between the grouped-einsum and Pallas
     sparse-matmul strategies for one pattern — the ``sparse.linear``
@@ -293,7 +295,16 @@ def choose_matmul_strategy(
     plan-cache write, since caching per-structure plans for a structure
     that never repeats only pollutes the cache.  Slow-changing families
     fall through to the staged (measured/cached) path below.
+
+    ``mode="predict"`` consults the learned cost model over the ``linear``
+    plan corpus (``core/cost_model.py``) before benchmarking: a confident
+    prediction records a ``source="predicted"`` plan with ZERO
+    micro-benchmarks (this is how ``warm_matmul_plans`` warms a thousand
+    patterns in seconds); an uncertain one falls back to measurement.
+    ``cost_model=`` pins a pre-loaded model so batch warmers fit once.
     """
+    if mode not in ("measure", "predict"):
+        raise ValueError(f"unknown strategy mode {mode!r}")
     from ..core import cache as cachelib
     from ..core.staging import StagingOptions
 
@@ -322,6 +333,45 @@ def choose_matmul_strategy(
         return plan.options.backend
 
     candidates = ["grouped"] + (["pallas"] if device == "tpu" else [])
+
+    if mode == "predict" and len(candidates) > 1:
+        from ..core import cost_model as cmlib
+
+        model = (
+            cost_model
+            if cost_model is not None
+            else cmlib.load_or_fit(store, device, "linear")
+        )
+        if model is not None:
+            feats = cmlib.pattern_features(pattern)
+            ok, _why = model.confident(feats, candidates)
+            if ok:
+                preds = model.predict(feats, candidates)
+                best = min(preds, key=preds.get)
+                plan = cachelib.TuningPlan(
+                    kind="linear",
+                    structure_hash=phash,
+                    options=StagingOptions(
+                        backend=best, tile=(pattern.tm, pattern.tk)
+                    ),
+                    device=device,
+                    timings=preds,  # estimates, NOT measurements
+                    meta={
+                        "d_in": pattern.d_in,
+                        "d_out": pattern.d_out,
+                        "tm": pattern.tm,
+                        "tk": pattern.tk,
+                        "n_tiles": pattern.n_tiles,
+                        "density": pattern.density,
+                    },
+                    source="predicted",
+                )
+                store.store_plan(key, plan)
+                _STRATEGY_REGISTRY[reg_key] = best
+                cmlib._STATS["plans_predicted"] += 1
+                return best
+        cmlib._STATS["predict_fallbacks"] += 1
+
     timings: dict[str, float] = {}
     if len(candidates) > 1 and allow_bench:
         from ..core.autotune import measure
@@ -409,7 +459,7 @@ def _seed_shard_strategy(pattern: BlockPattern, shard, strategy: str,
 
 
 def warm_matmul_plans(patterns, batch: int = 8, cache=None, mesh=None,
-                      shard_axis: str = "shards") -> dict:
+                      shard_axis: str = "shards", mode: str = "measure") -> dict:
     """Resolve strategies for many patterns ahead of tracing (server
     startup hook — e.g. ``ServeEngine``).  Returns {hash: strategy}.
 
@@ -419,7 +469,13 @@ def warm_matmul_plans(patterns, batch: int = 8, cache=None, mesh=None,
     re-benchmarks); a per-shard plan already on disk overrides it.  2-D
     (shards x model) staging meshes warm the same per-shard keys; a mesh
     with no shard axis at all (e.g. a pure ("data", "model") production
-    mesh) warms the base plans only."""
+    mesh) warms the base plans only.
+
+    ``mode="predict"`` loads/fits the cost model ONCE and resolves every
+    cold pattern by prediction where the model is confident — this is the
+    thousand-structure warm path: seconds of closed-form ranking instead
+    of minutes of per-pattern micro-benchmarks, with per-pattern fallback
+    to measurement for out-of-corpus or too-close calls."""
     out = {}
     shard_ids = []
     if mesh is not None:
@@ -431,8 +487,19 @@ def warm_matmul_plans(patterns, batch: int = 8, cache=None, mesh=None,
             axis = None  # no shard axis (e.g. TP-only mesh): base plans only
         if axis is not None:
             shard_ids = list(range(int(mesh.shape[axis])))
+    model = None
+    if mode == "predict":
+        import jax as _jax
+
+        from ..core import cache as cachelib
+        from ..core import cost_model as cmlib
+
+        store = cache if cache is not None else cachelib.default_cache()
+        model = cmlib.load_or_fit(store, _jax.default_backend(), "linear")
     for p in patterns:
-        base = choose_matmul_strategy(p, batch=batch, cache=cache)
+        base = choose_matmul_strategy(
+            p, batch=batch, cache=cache, mode=mode, cost_model=model
+        )
         out[pattern_hash(p)] = base
         for i in shard_ids:
             shard = (i, len(shard_ids))

@@ -1,0 +1,408 @@
+"""Learned cost model (core.cost_model) + autotune/linear predict modes.
+
+Prediction-quality assertions run on *planted* corpora whose timings are
+exact log-linear functions of the features — recoverable by the ridge
+model to machine precision — so the >=80% top-1 agreement bar is a real
+invariant, not a flaky micro-benchmark race.  Real measurements appear
+only in fallback tests, where what is asserted is that measurement
+HAPPENED.
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+import repro.core.autotune as autotune_mod
+from repro.core import cost_model as cmlib
+from repro.core import vbr as vbrlib
+from repro.core.autotune import (
+    autotune,
+    autotune_stats,
+    candidate_options,
+    reset_autotune_stats,
+    _structure_meta,
+)
+from repro.core.cache import PlanCache, TuningPlan, plan_key
+from repro.core.staging import StagingOptions, clear_cache
+
+
+@pytest.fixture(autouse=True)
+def _fresh_state():
+    clear_cache()
+    reset_autotune_stats()
+    cmlib.reset_cost_model_stats()
+    yield
+    clear_cache()
+    reset_autotune_stats()
+    cmlib.reset_cost_model_stats()
+
+
+def _family(count, seed0=0):
+    """Structures varying along block count — one in-distribution axis."""
+    rng = np.random.default_rng(1)
+    return [
+        vbrlib.synthesize(
+            400, 400, 10, 10, int(rng.integers(10, 60)), 0.3, False,
+            seed=seed0 + s,
+        )
+        for s in range(count)
+    ]
+
+
+# planted per-label weights: (bias, coef on log_nnz, coef on log_blocks).
+# Well separated, so predicted margins clear DEFAULT_MARGIN easily.
+_WEIGHTS = {
+    "grouped": (-12.0, 0.9, 0.0),
+    "bucketed": (-10.0, 0.8, 0.35),
+    "grouped+hybrid0.5": (-8.0, 0.85, 0.1),
+}
+
+
+def _planted_timings(feats, weights=_WEIGHTS):
+    return {
+        lbl: float(np.exp(b + c_nnz * feats[2] + c_nb * feats[3]))
+        for lbl, (b, c_nnz, c_nb) in weights.items()
+    }
+
+
+def _seed_corpus(cache, vbrs, device="cpu"):
+    for v in vbrs:
+        meta = _structure_meta(v)
+        feats = cmlib.meta_features("spmv", meta)
+        h = vbrlib.structure_hash(v)
+        cache.store_plan(
+            plan_key("spmv", h, device),
+            TuningPlan(
+                kind="spmv",
+                structure_hash=h,
+                options=StagingOptions(backend="grouped"),
+                device=device,
+                timings=_planted_timings(feats),
+                meta=meta,
+                source="measured",
+            ),
+        )
+
+
+# --------------------------------------------------------------------- #
+# never-guess contract
+# --------------------------------------------------------------------- #
+def test_empty_corpus_predict_is_bitwise_measurement(tmp_path, monkeypatch):
+    """With no corpus the predict mode IS the measure mode: same plan,
+    bit for bit (deterministic fake measure makes timings comparable)."""
+    v = _family(1)[0]
+
+    def run(mode, root):
+        calls = itertools.count()
+        monkeypatch.setattr(
+            autotune_mod, "measure",
+            lambda fn, *a, **k: 0.001 * (next(calls) % 7 + 1),
+        )
+        return autotune(v, "spmv", mode=mode, cache=PlanCache(str(root)))
+
+    p_measure = run("measure", tmp_path / "a")
+    p_predict = run("predict", tmp_path / "b")
+    assert p_predict.source == "measured"
+    assert p_predict.to_dict() == p_measure.to_dict()
+    assert cmlib.cost_model_stats()["predict_fallbacks"] == 1
+
+
+def test_ood_structure_falls_back_to_measurement(tmp_path):
+    cache = PlanCache(str(tmp_path))
+    _seed_corpus(cache, _family(12))
+    # far outside the corpus: 40x the rows, dense-ish
+    big = vbrlib.synthesize(2000, 2000, 40, 40, 900, 0.05, True, seed=7)
+    feats = cmlib.meta_features("spmv", _structure_meta(big))
+    model = cmlib.load_or_fit(cache, "cpu", "spmv")
+    ok, why = model.confident(
+        feats, [lbl for lbl, _ in candidate_options(big, device="cpu")]
+    )
+    assert not ok and "out of corpus" in why
+
+    plan = autotune(big, "spmv", mode="predict", cache=cache,
+                    warmup=0, iters=1)
+    assert plan.source == "measured"
+    assert autotune_stats()["benchmarks"] > 0
+    assert cmlib.cost_model_stats()["predict_fallbacks"] == 1
+
+
+def test_unknown_candidate_label_refuses():
+    vbrs = _family(12)
+    plans = []
+    for v in vbrs:
+        meta = _structure_meta(v)
+        feats = cmlib.meta_features("spmv", meta)
+        t = _planted_timings(feats)
+        t.pop("bucketed")  # corpus never saw this label
+        plans.append(TuningPlan(
+            kind="spmv", structure_hash=vbrlib.structure_hash(v),
+            options=StagingOptions(backend="grouped"), device="cpu",
+            timings=t, meta=meta, source="measured",
+        ))
+    model = cmlib.fit(plans, "cpu", "spmv")
+    feats = cmlib.meta_features("spmv", _structure_meta(vbrs[0]))
+    ok, why = model.confident(feats, ["grouped", "bucketed"])
+    assert not ok and "bucketed" in why
+
+
+def test_close_call_refuses():
+    vbrs = _family(12)
+    close = {"grouped": (-12.0, 0.9, 0.0), "bucketed": (-11.98, 0.9, 0.0)}
+    plans = []
+    for v in vbrs:
+        meta = _structure_meta(v)
+        feats = cmlib.meta_features("spmv", meta)
+        plans.append(TuningPlan(
+            kind="spmv", structure_hash=vbrlib.structure_hash(v),
+            options=StagingOptions(backend="grouped"), device="cpu",
+            timings=_planted_timings(feats, close), meta=meta,
+            source="measured",
+        ))
+    model = cmlib.fit(plans, "cpu", "spmv")
+    feats = cmlib.meta_features("spmv", _structure_meta(vbrs[0]))
+    ok, why = model.confident(feats, ["grouped", "bucketed"])
+    assert not ok and "margin" in why
+
+
+# --------------------------------------------------------------------- #
+# the confident path: zero benchmarks, measured-best agreement
+# --------------------------------------------------------------------- #
+def test_predict_stages_new_structure_with_zero_benchmarks(tmp_path):
+    vbrs = _family(40)
+    cache = PlanCache(str(tmp_path))
+    _seed_corpus(cache, vbrs[:36])
+
+    held = vbrs[37]
+    plan = autotune(held, "spmv", mode="predict", cache=cache,
+                    max_unrolled_blocks=0)
+    assert plan.source == "predicted"
+    assert autotune_stats()["benchmarks"] == 0
+    assert autotune_stats()["plans_predicted"] == 1
+    # the planted ground truth agrees with the prediction
+    truth = _planted_timings(
+        cmlib.meta_features("spmv", _structure_meta(held))
+    )
+    assert plan.options.backend == "grouped"
+    assert min(truth, key=truth.get) == "grouped"
+    # the predicted plan is cached and STAGEABLE without measurement
+    from repro.core.autotune import autotune_stage
+
+    kern = autotune_stage(held, "spmv", cache=cache, mode="predict",
+                          max_unrolled_blocks=0)
+    x = np.random.default_rng(0).standard_normal(held.shape[1]).astype(
+        np.float32
+    )
+    np.testing.assert_allclose(
+        np.asarray(kern(held.val, x)), held.to_dense() @ x,
+        rtol=1e-4, atol=1e-5,
+    )
+    assert autotune_stats()["benchmarks"] == 0
+
+
+def test_holdout_top1_agreement_at_least_80pct(tmp_path):
+    """ISSUE 8 acceptance: >=80% top-1 backend agreement on held-out
+    cached structures (leave-one-out over the planted corpus)."""
+    cache = PlanCache(str(tmp_path))
+    _seed_corpus(cache, _family(24))
+    plans = cmlib.corpus(cache, "cpu", "spmv")
+    assert len(plans) == 24
+    agree = 0
+    for i, held in enumerate(plans):
+        model = cmlib.fit(plans[:i] + plans[i + 1:], "cpu", "spmv")
+        preds = model.predict(cmlib.plan_features(held), held.timings)
+        if min(preds, key=preds.get) == min(held.timings, key=held.timings.get):
+            agree += 1
+    assert agree / len(plans) >= 0.8
+
+
+def test_predicted_plans_never_enter_the_corpus(tmp_path):
+    vbrs = _family(40)
+    cache = PlanCache(str(tmp_path))
+    _seed_corpus(cache, vbrs[:36])
+    autotune(vbrs[37], "spmv", mode="predict", cache=cache,
+             max_unrolled_blocks=0)
+    # the predicted plan is on disk...
+    key = plan_key("spmv", vbrlib.structure_hash(vbrs[37]), "cpu")
+    assert cache.load_plan(key).source == "predicted"
+    # ...but the training corpus still only sees the measured 36
+    assert len(cmlib.corpus(cache, "cpu", "spmv")) == 36
+
+
+# --------------------------------------------------------------------- #
+# persistence + refit policy
+# --------------------------------------------------------------------- #
+def test_model_persists_and_loads_without_refit(tmp_path):
+    cache = PlanCache(str(tmp_path))
+    _seed_corpus(cache, _family(12))
+    m1 = cmlib.load_or_fit(cache, "cpu", "spmv")
+    assert m1 is not None
+    assert cmlib.cost_model_stats()["model_fits"] == 1
+    assert cache.load_model(cmlib.model_key("spmv", "cpu")) is not None
+
+    cmlib.reset_cost_model_stats()
+    m2 = cmlib.load_or_fit(cache, "cpu", "spmv")
+    assert cmlib.cost_model_stats() == {
+        "model_fits": 0, "model_loads": 1,
+        "plans_predicted": 0, "predict_fallbacks": 0,
+    }
+    assert m2.n_train == m1.n_train
+    np.testing.assert_allclose(
+        m2.weights["grouped"], m1.weights["grouped"]
+    )
+
+
+def test_model_refits_when_corpus_outgrows_it(tmp_path):
+    cache = PlanCache(str(tmp_path))
+    vbrs = _family(24)
+    _seed_corpus(cache, vbrs[:12])
+    m1 = cmlib.load_or_fit(cache, "cpu", "spmv")
+    assert m1.n_train == 12
+    # 12 -> 24 is past REFIT_GROWTH (1.5x): must refit, not replay
+    _seed_corpus(cache, vbrs[12:])
+    cmlib.reset_cost_model_stats()
+    m2 = cmlib.load_or_fit(cache, "cpu", "spmv")
+    assert m2.n_train == 24
+    assert cmlib.cost_model_stats()["model_fits"] == 1
+
+
+def test_corpus_too_small_returns_none(tmp_path):
+    cache = PlanCache(str(tmp_path))
+    _seed_corpus(cache, _family(cmlib.MIN_CORPUS - 1))
+    assert cmlib.load_or_fit(cache, "cpu", "spmv") is None
+
+
+def test_models_are_per_device(tmp_path):
+    cache = PlanCache(str(tmp_path))
+    _seed_corpus(cache, _family(12), device="tpu")
+    assert cmlib.load_or_fit(cache, "cpu", "spmv") is None
+    assert cmlib.load_or_fit(cache, "tpu", "spmv") is not None
+
+
+def test_cache_stats_count_models(tmp_path):
+    cache = PlanCache(str(tmp_path))
+    _seed_corpus(cache, _family(12))
+    cmlib.load_or_fit(cache, "cpu", "spmv")
+    assert cache.stats()["models"] == 1
+    cache.clear()
+    assert cache.stats()["models"] == 0
+
+
+# --------------------------------------------------------------------- #
+# the linear (NN-path) consumer
+# --------------------------------------------------------------------- #
+def test_linear_predict_resolves_strategy_without_benchmarks(
+    tmp_path, monkeypatch
+):
+    import jax
+
+    from repro.sparse.linear import (
+        choose_matmul_strategy,
+        pattern_hash,
+        random_pattern,
+    )
+
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    store = PlanCache(str(tmp_path))
+    # corpus: densities sweeping the in-distribution axis, pallas planted
+    # as the clear winner (log-linear in log_nnz)
+    pats = [
+        random_pattern(64, 64, 16, 16, 0.2 + 0.05 * i, seed=100 + i)
+        for i in range(12)
+    ]
+    for p in pats[:10]:
+        feats = cmlib.pattern_features(p)
+        store.store_plan(
+            plan_key("linear", pattern_hash(p), "tpu"),
+            TuningPlan(
+                kind="linear",
+                structure_hash=pattern_hash(p),
+                options=StagingOptions(backend="grouped", tile=(16, 16)),
+                device="tpu",
+                timings={
+                    "grouped": float(np.exp(-10 + 0.9 * feats[2])),
+                    "pallas": float(np.exp(-13 + 0.9 * feats[2])),
+                },
+                meta={"d_in": p.d_in, "d_out": p.d_out, "tm": p.tm,
+                      "tk": p.tk, "n_tiles": p.n_tiles,
+                      "density": p.density},
+                source="measured",
+            ),
+        )
+
+    strategy = choose_matmul_strategy(pats[11], cache=store, mode="predict")
+    assert strategy == "pallas"
+    assert autotune_stats()["benchmarks"] == 0
+    assert cmlib.cost_model_stats()["plans_predicted"] == 1
+    stored = store.load_plan(plan_key("linear", pattern_hash(pats[11]), "tpu"))
+    assert stored.source == "predicted"
+
+
+def test_warm_matmul_plans_predict_fits_model_once(tmp_path, monkeypatch):
+    import jax
+
+    from repro.sparse.linear import (
+        pattern_hash,
+        random_pattern,
+        warm_matmul_plans,
+    )
+
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    store = PlanCache(str(tmp_path))
+    pats = [
+        random_pattern(64, 64, 16, 16, 0.2 + 0.05 * i, seed=200 + i)
+        for i in range(14)
+    ]
+    for p in pats[:10]:
+        feats = cmlib.pattern_features(p)
+        store.store_plan(
+            plan_key("linear", pattern_hash(p), "tpu"),
+            TuningPlan(
+                kind="linear", structure_hash=pattern_hash(p),
+                options=StagingOptions(backend="grouped", tile=(16, 16)),
+                device="tpu",
+                timings={
+                    "grouped": float(np.exp(-10 + 0.9 * feats[2])),
+                    "pallas": float(np.exp(-13 + 0.9 * feats[2])),
+                },
+                meta={"d_in": p.d_in, "d_out": p.d_out, "tm": p.tm,
+                      "tk": p.tk, "n_tiles": p.n_tiles,
+                      "density": p.density},
+                source="measured",
+            ),
+        )
+    out = warm_matmul_plans(pats[10:], cache=store, mode="predict")
+    assert len(out) == 4
+    assert set(out.values()) == {"pallas"}
+    st = cmlib.cost_model_stats()
+    assert st["plans_predicted"] == 4
+    assert st["model_fits"] + st["model_loads"] == 1  # fit once, shared
+    assert autotune_stats()["benchmarks"] == 0
+
+
+# --------------------------------------------------------------------- #
+# serialization details
+# --------------------------------------------------------------------- #
+def test_feature_drift_invalidates_stored_model(tmp_path):
+    cache = PlanCache(str(tmp_path))
+    _seed_corpus(cache, _family(12))
+    cmlib.load_or_fit(cache, "cpu", "spmv")
+    doc = cache.load_model(cmlib.model_key("spmv", "cpu"))
+    doc["feature_names"] = ["something_else"]
+    cache.store_model(cmlib.model_key("spmv", "cpu"), doc)
+    cmlib.reset_cost_model_stats()
+    m = cmlib.load_or_fit(cache, "cpu", "spmv")  # refits instead of raising
+    assert m is not None
+    assert cmlib.cost_model_stats()["model_fits"] == 1
+
+
+def test_old_plans_without_block_moments_featurize():
+    meta = {"shape": [100, 100], "stored_nnz": 500, "num_blocks": 5}
+    feats = cmlib.meta_features("spmv", meta)
+    assert np.all(np.isfinite(feats))
+    assert feats[4] == pytest.approx(np.log1p(100.0))  # mean = nnz/blocks
+
+
+def test_invalid_mode_rejected():
+    v = _family(1)[0]
+    with pytest.raises(ValueError, match="mode"):
+        autotune(v, "spmv", mode="guess")

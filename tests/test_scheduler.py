@@ -271,6 +271,77 @@ def test_warm_first_without_aging_would_not_default(engine):
         engine.make_scheduler(policy="best_effort")
 
 
+def _seed_linear_corpus(store, n=10):
+    """Measured `linear` plans with planted timings proportional to tile
+    count, so the cost model ranks patterns by n_tiles."""
+    from repro.core import cost_model as cmlib
+    from repro.core.cache import TuningPlan, plan_key
+    from repro.core.staging import StagingOptions
+    from repro.sparse.linear import pattern_hash
+
+    for i in range(n):
+        p = random_pattern(64, 64, 8, 8, 0.15 + 0.08 * i, seed=300 + i)
+        feats = cmlib.pattern_features(p)
+        store.store_plan(
+            plan_key("linear", pattern_hash(p), "cpu"),
+            TuningPlan(
+                kind="linear", structure_hash=pattern_hash(p),
+                options=StagingOptions(backend="grouped", tile=(8, 8)),
+                device="cpu",
+                timings={"grouped": float(np.exp(-10 + 0.9 * feats[2]))},
+                meta={"d_in": p.d_in, "d_out": p.d_out, "tm": p.tm,
+                      "tk": p.tk, "n_tiles": p.n_tiles,
+                      "density": p.density},
+                source="measured",
+            ),
+        )
+
+
+def test_cold_cost_scoring_admits_cheapest_staging_first(engine, tmp_path):
+    """With cold_cost_scoring, an all-cold queue admits the request whose
+    patterns the model predicts cheapest to stage — not arrival order."""
+    cfg = engine.cfg
+    store = PlanCache(str(tmp_path))
+    _seed_linear_corpus(store)
+    expensive = (random_pattern(64, 64, 8, 8, 0.85, seed=401),)
+    cheap = (random_pattern(64, 64, 8, 8, 0.2, seed=402),)
+    prompts = _prompts(cfg, [4, 4], seed=71)
+    sched = engine.make_scheduler(
+        page_size=4, max_batch=1, plan_cache=store, policy="warm_first",
+        cold_cost_scoring=True, cold_stage_budget=0, max_skips=10,
+        clock=_fake_clock(),
+    )
+    sched.submit(prompts[0], 4, patterns=expensive, rid="slow", arrival=0.0)
+    sched.submit(prompts[1], 4, patterns=cheap, rid="fast", arrival=1.0)
+    results = sched.run()
+    assert all(r["state"] == "FINISHED" for r in results.values())
+    m = {rid: sched.requests[rid].metrics["admitted_at"] for rid in results}
+    assert m["fast"] < m["slow"]  # later arrival, cheaper predicted staging
+    np.testing.assert_array_equal(
+        results["slow"]["tokens"], _reference(engine, prompts[0], 4)
+    )
+
+
+def test_cold_cost_scoring_off_keeps_arrival_order(engine, tmp_path):
+    """Default (scoring off): the same all-cold queue admits in arrival
+    order — the golden-transcript behavior."""
+    cfg = engine.cfg
+    store = PlanCache(str(tmp_path))
+    _seed_linear_corpus(store)
+    expensive = (random_pattern(64, 64, 8, 8, 0.85, seed=401),)
+    cheap = (random_pattern(64, 64, 8, 8, 0.2, seed=402),)
+    prompts = _prompts(cfg, [4, 4], seed=71)
+    sched = engine.make_scheduler(
+        page_size=4, max_batch=1, plan_cache=store, policy="warm_first",
+        cold_stage_budget=0, max_skips=10, clock=_fake_clock(),
+    )
+    sched.submit(prompts[0], 4, patterns=expensive, rid="slow", arrival=0.0)
+    sched.submit(prompts[1], 4, patterns=cheap, rid="fast", arrival=1.0)
+    results = sched.run()
+    m = {rid: sched.requests[rid].metrics["admitted_at"] for rid in results}
+    assert m["slow"] < m["fast"]
+
+
 # ---------------------------------------------------------------------- #
 # 1-D mesh path: scheduler composes with sharded staging
 # ---------------------------------------------------------------------- #

@@ -1,9 +1,24 @@
 #!/usr/bin/env python
-"""Docs-link check: every relative markdown link must resolve to a file.
+"""Docs checks: markdown links AND inline code references must resolve.
 
-Scans tracked ``*.md`` files for ``[text](target)`` links, ignores absolute
-URLs and pure anchors, and fails if a relative target (path resolved
-against the containing file) does not exist.  Run from the repo root:
+Two passes over tracked ``*.md`` files:
+
+1. **Links** — every relative ``[text](target)`` must point at a file that
+   exists (path resolved against the containing file).
+2. **Code references** — in the curated docs set (README.md, docs/*.md,
+   benchmarks/README.md), inline code spans that *look like* repo paths
+   (`` `src/repro/core/autotune.py` ``, `` `tools/check_doc_links.py` ``)
+   must exist on disk, and dotted module references
+   (`` `repro.core.autotune.measure` ``, `` `autotune.measure` `` where
+   ``autotune`` is a module under ``src/repro``) must resolve to a module
+   file whose text actually defines/mentions the symbol.  This catches the
+   classic docs-drift failure: prose naming a helper that was renamed.
+
+Spans inside fenced code blocks are ignored (they are examples, not
+references), as are spans with spaces, placeholders (``<...>``, ``{...}``,
+``...``), shell/flag syntax, and bare identifiers that don't name a repo
+file — the check is deliberately conservative so it can run in CI without
+false positives.  Run from the repo root:
 
     python tools/check_doc_links.py
 """
@@ -14,9 +29,20 @@ import re
 import sys
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_SPAN_RE = re.compile(r"`([^`\n]+)`")
+FENCE_RE = re.compile(r"^(```|~~~).*?^\1\s*$", re.MULTILINE | re.DOTALL)
 SKIP_DIRS = {".git", ".github", "__pycache__", ".ruff_cache", ".pytest_cache"}
 # files quoting external repos verbatim — their relative links point elsewhere
 SKIP_FILES = {"SNIPPETS.md", "PAPERS.md"}
+# only curated docs get the (stricter) code-reference pass; planning files
+# (ISSUE/ROADMAP/CHANGES) legitimately reference not-yet-written code
+CODE_REF_FILES = {"README.md", "benchmarks/README.md"}
+CODE_REF_DIRS = {"docs"}
+
+PATHLIKE_RE = re.compile(r"^[\w./-]+\.(py|md|json|yml|yaml|toml|sh)$")
+# run artifacts docs legitimately name but which are never committed
+GENERATED = {"BENCH_results.json"}
+DOTTED_RE = re.compile(r"^[A-Za-z_][\w]*(\.[A-Za-z_][\w]*)+$")
 
 
 def iter_markdown(root: str):
@@ -27,25 +53,112 @@ def iter_markdown(root: str):
                 yield os.path.join(dirpath, name)
 
 
+def wants_code_refs(relpath: str) -> bool:
+    rel = relpath.replace(os.sep, "/")
+    return rel in CODE_REF_FILES or rel.split("/", 1)[0] in CODE_REF_DIRS
+
+
+def module_index(root: str) -> dict:
+    """basename (sans .py) -> [paths] for every python file under src/."""
+    idx: dict = {}
+    for dirpath, dirnames, filenames in os.walk(os.path.join(root, "src")):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for name in filenames:
+            if name.endswith(".py"):
+                idx.setdefault(name[:-3], []).append(
+                    os.path.join(dirpath, name)
+                )
+    return idx
+
+
+def symbol_in(path: str, symbol: str) -> bool:
+    try:
+        text = open(path, encoding="utf-8").read()
+    except OSError:
+        return False
+    return re.search(rf"\b{re.escape(symbol)}\b", text) is not None
+
+
+def check_code_span(span: str, doc_dir: str, root: str, modules: dict):
+    """None if the span is fine (resolves, or isn't a code reference)."""
+    span = span.strip()
+    # not a reference: spaces/placeholders/shell/flags/globs/env vars
+    if (
+        " " in span
+        or any(c in span for c in "<>{}$*|=\"'")
+        or span.startswith("-")
+        or "..." in span
+    ):
+        return None
+    span = span.rstrip(",;:")
+    if span.endswith("()"):
+        span = span[:-2]
+
+    if os.path.basename(span) in GENERATED:
+        return None
+    if PATHLIKE_RE.match(span):
+        for base in (doc_dir, root, os.path.join(root, "src"),
+                     os.path.join(root, "src", "repro")):
+            if os.path.exists(os.path.normpath(os.path.join(base, span))):
+                return None
+        # a bare filename (no slash) may live anywhere under src/
+        if "/" not in span and span.endswith(".py") and span[:-3] in modules:
+            return None
+        return f"path `{span}` not found"
+
+    if DOTTED_RE.match(span):
+        parts = span.split(".")
+        # repro.a.b.c — resolve the longest module-file prefix, then the
+        # remainder must appear in that file (attribute / symbol)
+        if parts[0] == "repro":
+            base = os.path.join(root, "src")
+            for cut in range(len(parts), 0, -1):
+                mod = os.path.join(base, *parts[:cut])
+                for cand in (mod + ".py", os.path.join(mod, "__init__.py")):
+                    if os.path.exists(cand):
+                        rest = parts[cut:]
+                        if not rest or symbol_in(cand, rest[0]):
+                            return None
+                        return f"`{span}`: `{rest[0]}` not in {os.path.relpath(cand, root)}"
+            return f"module `{span}` not found under src/"
+        # module.symbol where `module` names a file under src/ (the docs'
+        # shorthand, e.g. `autotune.measure`)
+        if parts[0] in modules and len(parts) == 2:
+            if any(symbol_in(p, parts[1]) for p in modules[parts[0]]):
+                return None
+            return f"`{span}`: `{parts[1]}` not in {parts[0]}.py"
+    return None  # bare identifiers, CLI names, etc. — out of scope
+
+
 def main() -> int:
     root = os.getcwd()
+    modules = module_index(root)
     bad = []
     for path in iter_markdown(root):
+        rel = os.path.relpath(path, root)
         text = open(path, encoding="utf-8").read()
         for target in LINK_RE.findall(text):
             if target.startswith(("http://", "https://", "mailto:", "#")):
                 continue
-            rel = target.split("#", 1)[0]
-            if not rel:
+            t = target.split("#", 1)[0]
+            if not t:
                 continue
-            resolved = os.path.normpath(os.path.join(os.path.dirname(path), rel))
+            resolved = os.path.normpath(os.path.join(os.path.dirname(path), t))
             if not os.path.exists(resolved):
-                bad.append((os.path.relpath(path, root), target))
+                bad.append((rel, f"BROKEN LINK: {target}"))
+        if wants_code_refs(rel):
+            prose = FENCE_RE.sub("", text)
+            for span in CODE_SPAN_RE.findall(prose):
+                err = check_code_span(
+                    span, os.path.dirname(path), root, modules
+                )
+                if err:
+                    bad.append((rel, f"BROKEN CODE REF: {err}"))
     if bad:
-        for src, target in bad:
-            print(f"BROKEN LINK: {src} -> {target}")
+        for src, msg in bad:
+            print(f"{src}: {msg}")
         return 1
-    print("all markdown links resolve")
+    print("all markdown links and code references resolve")
     return 0
 
 
