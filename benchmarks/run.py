@@ -26,6 +26,7 @@ from . import (
     bench_inspection,
     bench_mesh2d,
     bench_moe,
+    bench_reblock,
     bench_scaling,
     bench_serving,
     bench_sharded,
@@ -50,9 +51,12 @@ SUITES = {
     "serving": bench_serving.main,  # ISSUE 6: continuous-batching traffic
     "moe": bench_moe.main,  # ISSUE 7: dense-capacity vs dropless FFN
     "cost_model": bench_cost_model.main,  # ISSUE 8: predict vs measure
+    "reblock": bench_reblock.main,  # ISSUE 9: reblocking + DIA-hybrid
 }
 
-SMOKE_SUITES = ("spmv", "sharded", "mesh2d", "serving", "moe", "cost_model")
+SMOKE_SUITES = (
+    "spmv", "sharded", "mesh2d", "serving", "moe", "cost_model", "reblock",
+)
 
 
 def main() -> None:

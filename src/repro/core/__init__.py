@@ -26,3 +26,16 @@ from .autotune import (
     tune_num_workers,
 )
 from .cost_model import CostModel, cost_model_stats, load_or_fit, reset_cost_model_stats
+# NB: `inspect` and `reblock` are submodule imports only — re-exporting the
+# bare `detect_structure`/`propose_reblockings` names is fine, but the
+# modules themselves must stay addressable as `repro.core.inspect` /
+# `repro.core.reblock` (docs link to them by dotted path).
+from .inspect import StructureInfo, detect_pattern, detect_structure
+from .reblock import (
+    ReblockSpec,
+    apply_reblock,
+    propose_reblockings,
+    reblock_stats,
+    reset_reblock_stats,
+    stage_reblocked,
+)

@@ -28,6 +28,18 @@ Candidate space (gated by structure + device):
 plus the best ``partition_block_rows`` worker split (Section IV-D), chosen
 analytically from the block-size histogram rather than timed.
 
+``include_reblock=True`` extends the space with structure-derived
+candidates (docs/inspection.md): ``dia_hybrid`` when the detector
+(``core/inspect.py``) finds a diagonal-dominant pattern, and composite
+``reblock[<strategy>]+<backend>`` candidates that re-partition the VBR
+first (``core/reblock.py``, Ahrens-Boman DP / MXU-aligned tiles) and
+stage a backend over the reblocked layout.  A winning reblocked plan
+records its :class:`~.reblock.ReblockSpec` (``plan.reblock``) and the
+reblocked structure is cached under its own hash, so warm restarts apply
+the recorded partitions directly — no detection, no DP, no benchmarks.
+Extended-space plans live under a ``-rb`` key segment so they never
+alias plans tuned over the base space.
+
 At production cardinality even one measurement pass per structure is too
 slow; ``autotune(mode="predict")`` ranks the candidates with the learned
 cost model fit over the plan-cache corpus (``core/cost_model.py``) and
@@ -283,9 +295,15 @@ def _structure_meta(vbr: vbrlib.VBR) -> dict:
     """Structure summary recorded on every plan.  The block-size moments
     feed the cost model (core/cost_model.py) — they are what separates a
     few-large-blocks structure from a many-tiny-blocks one at equal nnz,
-    which is exactly where backend winners diverge."""
+    which is exactly where backend winners diverge.  The structure-class
+    fields (core/inspect.py) separate banded/diagonal patterns from
+    random-block ones — where the ``dia_hybrid``/reblocked candidates
+    diverge from the base backends."""
+    from . import inspect as inspectlib
+
     sizes = np.asarray([t.size for t in vbr.blocks()], dtype=np.int64)
     mean = float(sizes.mean()) if sizes.size else 0.0
+    info = inspectlib.detect_structure(vbr)
     return {
         "shape": [int(s) for s in vbr.shape],
         "num_blocks": int(vbr.num_blocks),
@@ -297,6 +315,10 @@ def _structure_meta(vbr: vbrlib.VBR) -> dict:
         "block_size_min": int(sizes.min()) if sizes.size else 0,
         "block_size_max": int(sizes.max()) if sizes.size else 0,
         "block_size_cv": float(sizes.std() / mean) if mean else 0.0,
+        "structure_class": info.structure_class,
+        "bandwidth": int(info.bandwidth),
+        "bandwidth_frac": float(info.bandwidth_frac),
+        "diag_occupancy": float(info.diag_occupancy),
     }
 
 
@@ -319,6 +341,7 @@ def autotune(
     iters: int = DEFAULT_ITERS,
     include_pallas: Optional[bool] = None,
     include_gather: bool = False,
+    include_reblock: bool = False,
     max_unrolled_blocks: int = MAX_UNROLLED_BLOCKS,
 ) -> TuningPlan:
     """Return the best :class:`TuningPlan` for ``(kind, vbr)``.
@@ -338,7 +361,13 @@ def autotune(
     micro-benchmarks.  Otherwise it falls back to measurement (never
     guessing), and the measured plan lands back in the corpus so the
     model improves online.  ``cost_model=`` pins a pre-loaded model
-    (batch warmers fit once, predict many)."""
+    (batch warmers fit once, predict many).
+
+    ``include_reblock=True`` additionally enumerates the structure-derived
+    candidates (see module docstring) and keys the plan with the ``-rb``
+    segment.  The detection + reblocking DP run only on this cold path —
+    a cache hit (or a churny ``family=`` pattern, which never reaches the
+    tuner) pays neither."""
     if kind not in ("spmv", "spmm"):
         raise ValueError(f"unknown kind {kind!r}")
     if kind == "spmm" and n_cols is None:
@@ -347,7 +376,7 @@ def autotune(
         raise ValueError(f"unknown autotune mode {mode!r}")
     device = jax.default_backend()
     shash = vbrlib.structure_hash(vbr)
-    key = plan_key(kind, shash, device, n_cols)
+    key = plan_key(kind, shash, device, n_cols, reblock=include_reblock)
     cache = cache if cache is not None else default_cache()
 
     if use_cache:
@@ -364,6 +393,43 @@ def autotune(
         include_gather=include_gather,
         max_unrolled_blocks=max_unrolled_blocks,
     )
+    spec_by_label: dict = {}
+    rvbr_by_label: dict = {}
+    dia_offsets = None
+    extra_meta: dict = {}
+    if include_reblock:
+        from . import inspect as inspectlib
+        from . import reblock as rblib
+
+        info = inspectlib.detect_structure(vbr)
+        if kind == "spmv" and info.wants_dia:
+            cands.append(("dia_hybrid", StagingOptions(backend="dia_hybrid")))
+            dia_offsets = [int(d) for d in info.dense_offsets]
+            extra_meta["dia_offsets"] = dia_offsets
+        specs = rblib.propose_reblockings(vbr, device=device)
+        if specs:
+            # the primary (DP-first) proposal's fill: deterministic from
+            # structure alone, so predict-time features match training
+            extra_meta["reblock_fill_ratio"] = float(specs[0].fill_ratio)
+        for spec in specs:
+            rvbr, _ = rblib.apply_reblock(vbr, spec)
+            for lbl, opts in candidate_options(
+                rvbr,
+                device=device,
+                include_pallas=include_pallas,
+                max_unrolled_blocks=max_unrolled_blocks,
+            ):
+                full = f"reblock[{spec.strategy}]+{lbl}"
+                cands.append((full, opts))
+                spec_by_label[full] = spec
+                rvbr_by_label[full] = rvbr
+            if use_cache:
+                # key every proposed reblocked structure in the cache at
+                # proposal time: whichever candidate any plan (measured
+                # now, predicted later) ends up pinning, warm restarts
+                # find the structure under spec.structure_hash and
+                # re-derive nothing
+                cache.store_structure(rvbr)
 
     if mode == "predict":
         from . import cost_model as cmlib
@@ -374,7 +440,7 @@ def autotune(
             else cmlib.load_or_fit(cache, device, kind)
         )
         if model is not None:
-            meta = _structure_meta(vbr)
+            meta = {**_structure_meta(vbr), **extra_meta}
             feats = cmlib.meta_features(kind, meta, n_cols)
             labels = [lbl for lbl, _ in cands]
             ok, _why = model.confident(
@@ -394,6 +460,7 @@ def autotune(
             if ok:
                 preds = model.predict(feats, labels)
                 best_label = min(preds, key=preds.get)
+                best_spec = spec_by_label.get(best_label)
                 plan = TuningPlan(
                     kind=kind,
                     structure_hash=shash,
@@ -404,12 +471,15 @@ def autotune(
                     num_workers=tune_num_workers(vbr),
                     meta=meta,
                     source="predicted",
+                    reblock=None if best_spec is None else best_spec.to_dict(),
                 )
                 _STATS["plans_predicted"] += 1
                 cmlib._STATS["plans_predicted"] += 1
                 if use_cache:
                     cache.store_plan(key, plan)
                     cache.store_structure(vbr)
+                    if best_label in rvbr_by_label:
+                        cache.store_structure(rvbr_by_label[best_label])
                 return plan
         _STATS["predict_fallbacks"] += 1
         cmlib._STATS["predict_fallbacks"] += 1
@@ -420,7 +490,19 @@ def autotune(
     best_label, best_opts, best_t = None, None, float("inf")
     for label, opts in cands:
         try:
-            kern = staginglib._cached(kind, vbr, opts, hints, n_cols=n_cols)
+            spec = spec_by_label.get(label)
+            if spec is not None:
+                from . import reblock as rblib
+
+                kern = rblib.stage_reblocked(
+                    vbr, spec, opts, kind, n_cols=n_cols, value_hints=value_hints
+                )
+            elif opts.backend == "dia_hybrid":
+                from ..kernels.dia_hybrid import stage_dia_hybrid
+
+                kern = stage_dia_hybrid(vbr, offsets=dia_offsets, opts=opts)
+            else:
+                kern = staginglib._cached(kind, vbr, opts, hints, n_cols=n_cols)
             t = measure(kern, val, x, warmup=warmup, iters=iters)
         except Exception:  # a candidate that fails to stage just drops out
             continue
@@ -437,6 +519,10 @@ def autotune(
         source = "measured"
     _STATS["plans_tuned"] += 1
 
+    best_spec = spec_by_label.get(best_label)
+    if best_spec is not None:
+        # the feature records the fill the plan actually pays
+        extra_meta["reblock_fill_ratio"] = float(best_spec.fill_ratio)
     plan = TuningPlan(
         kind=kind,
         structure_hash=shash,
@@ -445,12 +531,18 @@ def autotune(
         device=device,
         timings=timings,
         num_workers=tune_num_workers(vbr),
-        meta=_structure_meta(vbr),
+        meta={**_structure_meta(vbr), **extra_meta},
         source=source,
+        reblock=None if best_spec is None else best_spec.to_dict(),
     )
     if use_cache:
         cache.store_plan(key, plan)
         cache.store_structure(vbr)
+        if best_label in rvbr_by_label:
+            # key the REBLOCKED structure too: a warm restart loads the
+            # plan, applies the recorded partitions, and stages against
+            # this hash without re-deriving anything
+            cache.store_structure(rvbr_by_label[best_label])
     return plan
 
 
@@ -489,6 +581,19 @@ def autotune_stage(
     if base_opts is not None:
         opts = dataclasses.replace(
             opts, dtype=base_opts.dtype, interpret=base_opts.interpret
+        )
+    if plan.reblock is not None:
+        from . import reblock as rblib
+
+        spec = rblib.ReblockSpec.from_dict(plan.reblock)
+        return rblib.stage_reblocked(
+            vbr, spec, opts, kind, n_cols=n_cols, value_hints=value_hints
+        )
+    if opts.backend == "dia_hybrid":
+        from ..kernels.dia_hybrid import stage_dia_hybrid
+
+        return stage_dia_hybrid(
+            vbr, offsets=plan.meta.get("dia_offsets"), opts=opts
         )
     hints = value_hints if value_hints is not None else (
         vbr.val if opts.density_threshold > 0 else None

@@ -27,8 +27,16 @@ Plan JSON schema (version 1)::
       "timings": {"<candidate label>": seconds, ...},
       "num_workers": int,                   # best partition_block_rows split
       "meta": {"shape": [m, k], "num_blocks": int, "stored_nnz": int, ...},
-      "source": "measured" | "heuristic" | "predicted" | "inherited"
+      "source": "measured" | "heuristic" | "predicted" | "inherited",
+      "reblock": {<ReblockSpec fields>}      # OPTIONAL — omitted when absent
     }
+
+``reblock`` (core/reblock.py) is present only when the winning candidate
+re-partitions the structure first: it pins the reblocked row/column
+partitions and the REBLOCKED structure hash, so a warm restart applies
+the recorded partitions directly (pure numpy gather build) — no DP, no
+cost evaluation, zero benchmarks.  The reblocked structure itself is
+stored in ``structures/`` under its own hash like any other.
 
 ``source`` provenance: ``measured`` plans carry micro-benchmark timings
 and are the cost-model training corpus; ``predicted`` plans carry the
@@ -83,13 +91,16 @@ class TuningPlan:
     num_workers: int = 1
     meta: dict = dataclasses.field(default_factory=dict)
     source: str = "measured"
+    # ReblockSpec dict (core/reblock.py) when the winner re-partitions the
+    # structure first; None (and omitted from JSON) otherwise
+    reblock: Optional[dict] = None
 
     @property
     def best_time(self) -> Optional[float]:
         return min(self.timings.values()) if self.timings else None
 
     def to_dict(self) -> dict:
-        return {
+        d = {
             "version": PLAN_VERSION,
             "kind": self.kind,
             "structure_hash": self.structure_hash,
@@ -101,6 +112,9 @@ class TuningPlan:
             "meta": dict(self.meta),
             "source": self.source,
         }
+        if self.reblock is not None:
+            d["reblock"] = dict(self.reblock)
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "TuningPlan":
@@ -116,6 +130,7 @@ class TuningPlan:
             num_workers=d.get("num_workers", 1),
             meta=d.get("meta", {}),
             source=d.get("source", "measured"),
+            reblock=d.get("reblock"),
         )
 
 
@@ -152,6 +167,7 @@ def plan_key(
     shard_id=None,
     num_shards=None,
     model_cols=None,
+    reblock: bool = False,
 ) -> str:
     """Filename-safe cache key.  Plans are per-device: the measured-best
     backend on a TPU (pallas) is not the best on CPU (grouped).
@@ -164,6 +180,12 @@ def plan_key(
     each shard stages for its LOCAL column count; ``model_cols`` —
     ``...-mc4`` — keys those plans apart from the full-width ones and a
     warm restart of the same mesh factorization re-benchmarks nothing.
+    ``reblock=True`` appends ``-rb``: the plan was tuned with the EXTENDED
+    candidate space (reblocking proposals + structure-detected backends,
+    core/reblock.py / core/inspect.py).  A winner chosen from a larger
+    candidate set must never alias — or be shadowed by — a plan tuned
+    without those candidates, so the key segment separates the two worlds
+    the same way ``device`` does.
     """
     parts = [kind, structure_hash, device]
     if n_cols is not None:
@@ -174,6 +196,8 @@ def plan_key(
         parts.append(f"x{int(num_shards)}")
     if model_cols is not None:
         parts.append(f"mc{int(model_cols)}")
+    if reblock:
+        parts.append("rb")
     return "-".join(parts)
 
 

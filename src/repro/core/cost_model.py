@@ -65,7 +65,10 @@ __all__ = [
     "FEATURE_NAMES",
 ]
 
-COST_MODEL_VERSION = 1
+# v2: structure-class features (bandwidth_frac / diag_occupancy /
+# reblock_fill) joined FEATURE_NAMES — the bump orphans v1 models by key
+# so they refit instead of replaying weights over a different feature set
+COST_MODEL_VERSION = 2
 
 # calibration knobs (overridable per call)
 MIN_CORPUS = 8          # plans needed before a model is fit at all
@@ -86,6 +89,11 @@ FEATURE_NAMES = (
     "block_cv",
     "density",
     "log_n_cols",
+    # structure-class features (core/inspect.py / core/reblock.py): these
+    # separate the patterns where dia_hybrid / reblocked candidates win
+    "bandwidth_frac",   # scalar bandwidth / max dim (1.0 when unrecorded)
+    "diag_occupancy",   # nnz fraction on dense diagonals (0.0 default)
+    "reblock_fill",     # fill ratio of the primary reblocking proposal
 )
 
 _STATS = {
@@ -133,6 +141,11 @@ def meta_features(kind: str, meta: dict, n_cols=None) -> np.ndarray:
         bcv = float(meta.get("block_size_cv", 0.0))
         density = float(meta.get("density", 1.0))
     nc = 1.0 if n_cols is None else float(n_cols)
+    # structure-class features degrade gracefully on pre-v2 metas: a full
+    # band (1.0), no dense diagonals (0.0), no reblocking fill (1.0)
+    band_frac = float(meta.get("bandwidth_frac", 1.0))
+    diag_occ = float(meta.get("diag_occupancy", 0.0))
+    reblock_fill = float(meta.get("reblock_fill_ratio", 1.0))
     return np.array(
         [
             math.log1p(rows),
@@ -144,6 +157,9 @@ def meta_features(kind: str, meta: dict, n_cols=None) -> np.ndarray:
             bcv,
             density,
             math.log1p(nc),
+            band_frac,
+            diag_occ,
+            reblock_fill,
         ],
         dtype=np.float64,
     )
@@ -316,11 +332,23 @@ def corpus(
 ) -> list:
     """Every *measured* plan for (device, kind) in the cache — predicted
     and heuristic plans are excluded so the model never trains on its own
-    output (no feedback loop)."""
+    output (no feedback loop).
+
+    Reblocked plans are additionally excluded UNLESS their structure meta
+    carries the reblock features (``reblock_fill_ratio``): a reblocked
+    plan's timings were measured over a different (reblocked) layout, so
+    training on it against features that don't describe that reblocking
+    would be the same no-feedback-loop violation — the features and the
+    label would silently disagree.  Plans written by this version always
+    carry the feature; the guard protects against plans written by
+    foreign/older writers.
+    """
     return [
         p
         for p in cache.iter_plans(device=device, kind=kind)
-        if p.source == "measured" and p.timings
+        if p.source == "measured"
+        and p.timings
+        and not (p.reblock is not None and "reblock_fill_ratio" not in p.meta)
     ]
 
 

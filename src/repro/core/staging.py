@@ -13,6 +13,8 @@ Stage 1  the IR is lowered to a specialized JAX program.  Backends:
                        scalar-prefetched block tables (HLO size O(1)),
            'gather'    generic vectorized evaluation of ANY DSL op
                        (the extensibility story of Section IV-A),
+           'dia_hybrid' dense diagonals DIA-style + staged remainder,
+                       SpMV-only (kernels/dia_hybrid.py, Fukaya et al.),
            'auto'      grouped (CPU/XLA) — pallas on TPU,
            'autotune'  measured choice: micro-benchmark the candidates via
                        ``core.autotune`` and persist the winner on disk
@@ -479,6 +481,16 @@ def stage_spmv(
     ``ppermute`` ring inside ``shard_map`` so gather traffic overlaps
     shard compute instead of a trailing all-gather.
     """
+    if opts.backend == "dia_hybrid":
+        if mesh is not None or shards is not None:
+            raise ValueError(
+                "backend='dia_hybrid' is unsharded (the diagonal gather "
+                "spans the full row range); stage unsharded or pick "
+                "another backend for the mesh path"
+            )
+        from ..kernels.dia_hybrid import stage_dia_hybrid
+
+        return stage_dia_hybrid(vbr, opts=opts)
     if mesh is not None or shards is not None:
         from .sharded import ShardedStagedKernel
 
@@ -512,6 +524,8 @@ def stage_spmm(
     """Stage a pattern-specialized SpMM kernel; ``mesh=``/``shards=`` as in
     :func:`stage_spmv`.  On a 2-D (shards x model) mesh the RHS columns
     are partitioned over the model axis (``n_cols`` must divide evenly)."""
+    if opts.backend == "dia_hybrid":
+        raise ValueError("backend='dia_hybrid' is SpMV-only")
     if mesh is not None or shards is not None:
         from .sharded import ShardedStagedKernel
 
@@ -582,8 +596,19 @@ def partition_block_rows(vbr: vbrlib.VBR, num_workers: int) -> list[list[int]]:
 
 
 def clear_cache() -> None:
+    import sys
+
     _CACHE.clear()
     _CACHE_STATS.update(hits=0, misses=0)
+    # the reblock/dia wrappers keep their own kernel memos keyed the same
+    # way — a "fresh process" simulation must drop those too
+    for modname, fn in (
+        ("repro.core.reblock", "clear_reblock_cache"),
+        ("repro.kernels.dia_hybrid", "clear_dia_cache"),
+    ):
+        mod = sys.modules.get(modname)
+        if mod is not None:
+            getattr(mod, fn)()
 
 
 def cache_info() -> dict:

@@ -1,4 +1,5 @@
 """Pallas TPU kernels for the SABLE compute hot-spots."""
-from . import bsr_ops, ops, ref
+from . import bsr_ops, dia_hybrid, ops, ref
 from .bsr_ops import dds, dsd, sdd
+from .dia_hybrid import stage_dia_hybrid
 from .ops import bsr_spmm, bsr_spmv

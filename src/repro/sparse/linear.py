@@ -221,10 +221,68 @@ def _fixed_block_matmul(x: jnp.ndarray, tiles: jnp.ndarray,
     return y.reshape(*lead, pattern.d_out)
 
 
+def _dia_split(pattern: BlockPattern):
+    """Staging-time split of a pattern's tiles into the diagonal band
+    (each output tile-col used by at most one band tile, so the diagonal
+    half of the product is scatter-free) and the remainder."""
+    rows = np.asarray(pattern.rows)
+    cols = np.asarray(pattern.cols)
+    R = max(pattern.d_in // pattern.tm, 1)
+    C = max(pattern.d_out // pattern.tk, 1)
+    band = np.abs((cols + 0.5) / C - (rows + 0.5) / R) <= max(1.0 / R, 1.0 / C)
+    diag_idx: list[int] = []
+    used_cols: set[int] = set()
+    for i in np.nonzero(band)[0]:
+        if int(cols[i]) not in used_cols:
+            used_cols.add(int(cols[i]))
+            diag_idx.append(int(i))
+    off_idx = sorted(set(range(len(rows))) - set(diag_idx))
+    return np.asarray(diag_idx, np.int64), np.asarray(off_idx, np.int64)
+
+
+def _dia_hybrid_matmul(x: jnp.ndarray, tiles: jnp.ndarray,
+                       pattern: BlockPattern):
+    """DIA-hybrid strategy (kernels/dia_hybrid.py, NN-path counterpart):
+    the diagonal-band tiles place their outputs with a precomputed gather
+    (sentinel 0 = untouched col) instead of a scatter-add; only the
+    remainder tiles go through the grouped scatter path."""
+    lead = x.shape[:-1]
+    diag_idx, off_idx = _dia_split(pattern)
+    rows = np.asarray(pattern.rows)
+    cols = np.asarray(pattern.cols)
+    tm, tk = pattern.tm, pattern.tk
+    xf = x.reshape(-1, pattern.d_in)
+    y = jnp.zeros((xf.shape[0], pattern.d_out), dtype=x.dtype)
+    if len(diag_idx):
+        rg = rows[diag_idx][:, None] * tm + np.arange(tm)[None, :]
+        part = jnp.einsum(
+            "btm,tmk->btk", xf[:, jnp.asarray(rg)], tiles[jnp.asarray(diag_idx)]
+        )
+        place = np.zeros(pattern.d_out, np.int64)  # 0 = the sentinel zero
+        for j, t in enumerate(diag_idx):
+            c0 = int(cols[t]) * tk
+            place[c0 : c0 + tk] = j * tk + np.arange(tk) + 1
+        part1 = jnp.concatenate(
+            [jnp.zeros((xf.shape[0], 1), part.dtype),
+             part.reshape(xf.shape[0], -1)],
+            axis=1,
+        )
+        y = part1[:, jnp.asarray(place)]
+    if len(off_idx):
+        sub = BlockPattern(
+            pattern.d_in, pattern.d_out, tm, tk,
+            tuple(int(r) for r in rows[off_idx]),
+            tuple(int(c) for c in cols[off_idx]),
+        )
+        y = y + sparse_matmul(xf, tiles[jnp.asarray(off_idx)], sub)
+    return y.reshape(*lead, pattern.d_out)
+
+
 _MATMUL_IMPLS = {
     "grouped": sparse_matmul,
     "pallas": lambda x, tiles, pattern: _pallas_matmul_ad(pattern, x, tiles),
     "fixed_block": _fixed_block_matmul,
+    "dia_hybrid": _dia_hybrid_matmul,
 }
 # (pattern hash, device) -> strategy name, resolved once per process
 # (trace-safe).  The device is part of the key: the on-disk plan_key is
@@ -275,6 +333,7 @@ def choose_matmul_strategy(
     family: str = None,
     mode: str = "measure",
     cost_model=None,
+    include_dia: bool = False,
 ) -> str:
     """Measured (or cached) choice between the grouped-einsum and Pallas
     sparse-matmul strategies for one pattern — the ``sparse.linear``
@@ -302,6 +361,20 @@ def choose_matmul_strategy(
     micro-benchmarks (this is how ``warm_matmul_plans`` warms a thousand
     patterns in seconds); an uncertain one falls back to measurement.
     ``cost_model=`` pins a pre-loaded model so batch warmers fit once.
+
+    ``include_dia=True`` opts into structure detection
+    (``core.inspect.detect_pattern``): a pattern whose tiles sit densely on
+    the diagonal band gains the ``dia_hybrid`` candidate (scatter-free
+    diagonal placement, see ``_dia_hybrid_matmul``).  It is opt-in because
+    it widens the candidate space — plans are therefore keyed with the
+    ``rb`` plan-key segment (and an ``@rb`` registry suffix) so they never
+    alias base-space plans, and because ``random_pattern`` seeds a coverage
+    diagonal that would otherwise trip detection on patterns that are not
+    meaningfully diagonal.  Note the pattern itself is never re-tiled:
+    ``BlockPattern`` tiles are the parameter layout of a live model, so
+    unlike VBR reblocking (``core.reblock``) only the *compute schedule*
+    changes.  The ``family=`` churn check still runs first — churny
+    patterns never pay for detection.
     """
     if mode not in ("measure", "predict"):
         raise ValueError(f"unknown strategy mode {mode!r}")
@@ -318,6 +391,8 @@ def choose_matmul_strategy(
     reg_key = f"{phash}@{device}" if shard is None else (
         f"{phash}@{device}@s{shard[0]}of{shard[1]}"
     )
+    if include_dia:
+        reg_key += "@rb"  # extended candidate space: never alias base plans
     found = _STRATEGY_REGISTRY.get(reg_key)
     if found is not None:
         return found
@@ -325,6 +400,7 @@ def choose_matmul_strategy(
         "linear", phash, device,
         shard_id=None if shard is None else shard[0],
         num_shards=None if shard is None else shard[1],
+        reblock=include_dia,
     )
     store = cache if cache is not None else cachelib.default_cache()
     plan = store.load_plan(key)
@@ -333,6 +409,18 @@ def choose_matmul_strategy(
         return plan.options.backend
 
     candidates = ["grouped"] + (["pallas"] if device == "tpu" else [])
+    struct_meta: dict = {}
+    if include_dia:
+        from ..core.inspect import detect_pattern
+
+        info = detect_pattern(pattern)
+        struct_meta = {
+            "structure_class": info.structure_class,
+            "bandwidth_frac": info.bandwidth_frac,
+            "diag_occupancy": info.diag_occupancy,
+        }
+        if info.wants_dia:
+            candidates.append("dia_hybrid")
 
     if mode == "predict" and len(candidates) > 1:
         from ..core import cost_model as cmlib
@@ -363,6 +451,7 @@ def choose_matmul_strategy(
                         "tk": pattern.tk,
                         "n_tiles": pattern.n_tiles,
                         "density": pattern.density,
+                        **struct_meta,
                     },
                     source="predicted",
                 )
@@ -410,6 +499,7 @@ def choose_matmul_strategy(
             "tk": pattern.tk,
             "n_tiles": pattern.n_tiles,
             "density": pattern.density,
+            **struct_meta,
             **({} if shard is None else
                {"shard_id": shard[0], "num_shards": shard[1]}),
         },
@@ -459,7 +549,8 @@ def _seed_shard_strategy(pattern: BlockPattern, shard, strategy: str,
 
 
 def warm_matmul_plans(patterns, batch: int = 8, cache=None, mesh=None,
-                      shard_axis: str = "shards", mode: str = "measure") -> dict:
+                      shard_axis: str = "shards", mode: str = "measure",
+                      include_dia: bool = False) -> dict:
     """Resolve strategies for many patterns ahead of tracing (server
     startup hook — e.g. ``ServeEngine``).  Returns {hash: strategy}.
 
@@ -498,7 +589,8 @@ def warm_matmul_plans(patterns, batch: int = 8, cache=None, mesh=None,
         model = cmlib.load_or_fit(store, _jax.default_backend(), "linear")
     for p in patterns:
         base = choose_matmul_strategy(
-            p, batch=batch, cache=cache, mode=mode, cost_model=model
+            p, batch=batch, cache=cache, mode=mode, cost_model=model,
+            include_dia=include_dia,
         )
         out[pattern_hash(p)] = base
         for i in shard_ids:

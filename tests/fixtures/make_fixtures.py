@@ -78,6 +78,57 @@ def random_block() -> vbrlib.VBR:
     )
 
 
+def misblocked_banded() -> vbrlib.VBR:
+    """A narrow band stored under uniform 2-wide splits that ignore the
+    band entirely — the canonical structure the reblocking DP repairs
+    (tests/test_golden.py freezes the DP's proposal for it)."""
+    n = 48
+    rng = np.random.default_rng(303)
+    dense = np.zeros((n, n), np.float32)
+    for i in range(n):
+        for j in range(max(0, i - 3), min(n, i + 4)):
+            dense[i, j] = rng.standard_normal()
+    splits = list(range(0, n + 1, 2))
+    return vbrlib.from_dense(dense, splits, splits)
+
+
+def write_reblock_fixture() -> None:
+    """Freeze the reblocking DP's proposal on the misblocked band plus a
+    plan carrying it — drift in the Ahrens–Boman cost function, the DP,
+    the ``ReblockSpec`` schema, or the plan's ``reblock`` field fails the
+    golden suite instead of silently orphaning cached reblocked plans."""
+    from repro.core import reblock as rblib
+    from repro.core.autotune import _structure_meta
+
+    v = misblocked_banded()
+    spec = rblib.propose_reblockings(v, device="cpu")[0]
+    plan = TuningPlan(
+        kind="spmv",
+        structure_hash=vbrlib.structure_hash(v),
+        options=StagingOptions(backend="grouped"),
+        device="cpu",
+        timings={"grouped": 2e-4, "reblock[dp]+grouped": 1e-4},
+        meta={
+            **_structure_meta(v),
+            "reblock_fill_ratio": float(spec.fill_ratio),
+        },
+        source="measured",
+        reblock=spec.to_dict(),
+    )
+    doc = {
+        "structure_hash": vbrlib.structure_hash(v),
+        "reblock": spec.to_dict(),
+        "plan": plan.to_dict(),
+    }
+    with open(os.path.join(HERE, "reblock_plan.json"), "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    print(
+        f"reblock: hash={doc['structure_hash']} strategy={spec.strategy} "
+        f"cost={spec.cost:.0f} base={spec.base_cost:.0f} "
+        f"fill={spec.fill_ratio:.3f}"
+    )
+
+
 def write_fixture(name: str, v: vbrlib.VBR) -> None:
     rng = np.random.default_rng(7)
     x = rng.standard_normal(v.shape[1]).astype(np.float32)
@@ -200,4 +251,5 @@ if __name__ == "__main__":
         ("random_block", random_block),
     ]:
         write_fixture(name, build())
+    write_reblock_fixture()
     write_serving_fixture()

@@ -118,6 +118,66 @@ def test_structure_cache_roundtrip(name):
     assert back.shape == v.shape
 
 
+def _make_fixtures_module():
+    import importlib.util
+
+    spec = importlib.util.spec_from_file_location(
+        "make_fixtures", os.path.join(FIXTURES, "make_fixtures.py")
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def reblock_fixture():
+    with open(os.path.join(FIXTURES, "reblock_plan.json")) as f:
+        return json.load(f)
+
+
+def test_golden_reblock_spec_is_stable(reblock_fixture):
+    """The reblocking DP is part of the persisted-plan contract: a drift
+    in the Ahrens–Boman cost function, the DP's tie-breaking, or the
+    ``ReblockSpec`` schema would orphan (or worse, silently mis-apply)
+    every cached reblocked plan — so the proposal for the misblocked band
+    is frozen bit-for-bit."""
+    from repro.core import reblock as rblib
+
+    v = _make_fixtures_module().misblocked_banded()
+    assert vbrlib.structure_hash(v) == reblock_fixture["structure_hash"]
+    spec = rblib.propose_reblockings(v, device="cpu")[0]
+    assert spec.to_dict() == reblock_fixture["reblock"]
+
+
+def test_golden_reblock_plan_roundtrip(reblock_fixture):
+    """A plan carrying a ``reblock`` spec must round-trip the JSON schema
+    and the PlanCache bit-identically, and the spec must re-apply onto
+    the source structure (hash-validated inside ``apply_reblock``)."""
+    from repro.core import reblock as rblib
+
+    doc = reblock_fixture["plan"]
+    plan = TuningPlan.from_dict(doc)
+    assert plan.to_dict() == doc
+    assert plan.reblock is not None
+    cache = PlanCache(os.environ["REPRO_CACHE_DIR"])
+    key = plan_key(plan.kind, plan.structure_hash, plan.device, reblock=True)
+    cache.store_plan(key, plan)
+    back = cache.load_plan(key)
+    assert back is not None and back.to_dict() == doc
+    v = _make_fixtures_module().misblocked_banded()
+    spec = rblib.ReblockSpec.from_dict(plan.reblock)
+    rvbr, _ = rblib.apply_reblock(v, spec)
+    np.testing.assert_allclose(rvbr.to_dense(), v.to_dense())
+
+
+def test_golden_reblock_key_segment_is_stable(reblock_fixture):
+    """Extended-candidate-space plans live under the ``-rb`` key segment;
+    base-space keys must stay byte-identical to pre-reblocking releases."""
+    h = reblock_fixture["structure_hash"]
+    assert plan_key("spmv", h, "cpu") == f"spmv-{h}-cpu"
+    assert plan_key("spmv", h, "cpu", reblock=True) == f"spmv-{h}-cpu-rb"
+
+
 @pytest.fixture(scope="module")
 def serving_fixture():
     with open(os.path.join(FIXTURES, "serving.json")) as f:

@@ -1,0 +1,579 @@
+"""Reblocking, structure detection, and the DIA-hybrid backend.
+
+Covers the inspection layer end to end (docs/inspection.md):
+``core.inspect`` classification, the ``core.reblock`` Ahrens–Boman DP
+(checked against brute force on tiny axes), spec application and kernel
+equivalence, the ``kernels.dia_hybrid`` SpMV path, the autotuner's
+``include_reblock`` candidate space (cold tune / warm zero-rederivation),
+the cost-model corpus exclusion bugfix, and the ``sparse.linear``
+``include_dia`` exposure.
+"""
+import itertools
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import cache as cachelib
+from repro.core import inspect as inspectlib
+from repro.core import reblock as rblib
+from repro.core import vbr as vbrlib
+from repro.core.autotune import (
+    autotune,
+    autotune_stage,
+    autotune_stats,
+    reset_autotune_stats,
+)
+from repro.core.staging import StagingOptions, clear_cache, stage_spmm, stage_spmv
+from repro.kernels.dia_hybrid import stage_dia_hybrid
+
+TOL = dict(atol=3e-5, rtol=3e-5)
+
+
+@pytest.fixture(autouse=True)
+def _fresh(monkeypatch, tmp_path):
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path / "cache"))
+    clear_cache()
+    reset_autotune_stats()
+    rblib.reset_reblock_stats()
+    yield
+    clear_cache()
+
+
+# --------------------------------------------------------------------- #
+# structure builders
+# --------------------------------------------------------------------- #
+def banded_dense(n=48, bw=3, seed=0):
+    rng = np.random.default_rng(seed)
+    dense = np.zeros((n, n), np.float32)
+    for i in range(n):
+        for j in range(max(0, i - bw), min(n, i + bw + 1)):
+            dense[i, j] = rng.standard_normal()
+    return dense
+
+
+def misblocked_banded(n=48, bw=3, step=2, seed=0):
+    """A narrow band stored under uniform splits that ignore the band —
+    the structure the reblocking DP repairs."""
+    splits = list(range(0, n + 1, step))
+    return vbrlib.from_dense(banded_dense(n, bw, seed), splits, splits)
+
+
+def arrow_vbr(n=60, seed=1):
+    rng = np.random.default_rng(seed)
+    dense = np.zeros((n, n), np.float32)
+    splits = [0, 12, 20, 28, 40, 48, 60]
+    R = len(splits) - 1
+    for b in range(R):
+        dense[: splits[1], splits[b] : splits[b + 1]] = rng.standard_normal(
+            (splits[1], splits[b + 1] - splits[b])
+        )
+    for a in range(R):
+        dense[splits[a] : splits[a + 1], : splits[1]] = rng.standard_normal(
+            (splits[a + 1] - splits[a], splits[1])
+        )
+        dense[splits[a] : splits[a + 1], splits[a] : splits[a + 1]] = (
+            rng.standard_normal(
+                (splits[a + 1] - splits[a], splits[a + 1] - splits[a])
+            )
+        )
+    return vbrlib.from_dense(dense, splits, splits)
+
+
+# --------------------------------------------------------------------- #
+# detection (core.inspect)
+# --------------------------------------------------------------------- #
+def test_detect_banded():
+    info = inspectlib.detect_structure(misblocked_banded())
+    assert info.structure_class == "banded"
+    assert info.bandwidth == 3
+    assert info.bandwidth_frac <= inspectlib.BAND_FRAC
+    assert info.wants_dia  # a full narrow band is also densely diagonal
+
+
+def test_detect_arrow():
+    info = inspectlib.detect_structure(arrow_vbr())
+    assert info.structure_class == "arrow"
+    assert info.arrow_score >= inspectlib.ARROW_SCORE
+
+
+def test_detect_partially_diagonal():
+    """Dense main diagonal plus scattered off-band noise: diagonal
+    occupancy qualifies, bandwidth does not."""
+    n = 64
+    rng = np.random.default_rng(3)
+    dense = np.diag(rng.standard_normal(n).astype(np.float32))
+    ii = rng.integers(0, n, 40)
+    jj = rng.integers(0, n, 40)
+    dense[ii, jj] += rng.standard_normal(40).astype(np.float32)
+    splits = list(range(0, n + 1, 4))
+    info = inspectlib.detect_structure(vbrlib.from_dense(dense, splits, splits))
+    assert info.structure_class == "partially_diagonal"
+    assert 0 in info.dense_offsets
+    assert info.wants_dia
+
+
+def test_detect_random_block():
+    v = vbrlib.synthesize(120, 100, 10, 8, 30, 0.25, uniform=False, seed=42)
+    info = inspectlib.detect_structure(v)
+    assert info.structure_class == "random_block"
+    assert not info.wants_dia
+
+
+def test_detect_empty():
+    v = vbrlib.from_dense(np.zeros((12, 12), np.float32), [0, 6, 12], [0, 6, 12])
+    assert inspectlib.detect_structure(v).structure_class == "empty"
+
+
+def test_detect_pattern_banded():
+    from repro.sparse.linear import BlockPattern
+
+    R = C = 10
+    rows, cols = zip(*[(i, j) for i in range(R)
+                       for j in (i - 1, i, i + 1) if 0 <= j < C])
+    pat = BlockPattern(R * 4, C * 4, 4, 4, rows, cols)
+    info = inspectlib.detect_pattern(pat)
+    assert info.structure_class == "banded"
+    assert info.wants_dia
+
+
+# --------------------------------------------------------------------- #
+# the partition DP (core.reblock)
+# --------------------------------------------------------------------- #
+def _brute_force_1d(coord, ortho_block, ortho_widths, n, alpha):
+    """Exhaustive minimum over every contiguous row partition (tiny n)."""
+    best = np.inf
+    for bits in itertools.product([0, 1], repeat=n - 1):
+        pts = [0] + [i + 1 for i, b in enumerate(bits) if b] + [n]
+        cost = 0.0
+        for a, b in zip(pts[:-1], pts[1:]):
+            mask = (coord >= a) & (coord < b)
+            hit = np.unique(ortho_block[mask])
+            cost += alpha * len(hit) + (b - a) * ortho_widths[hit].sum()
+        best = min(best, cost)
+    return best
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_dp_matches_brute_force(seed):
+    """On axes small enough to enumerate, the DP's optimum equals the
+    exhaustive minimum over all contiguous partitions."""
+    n = 7
+    rng = np.random.default_rng(seed)
+    nnz = 12
+    r = rng.integers(0, n, nnz)
+    c = rng.integers(0, n, nnz)
+    cpntr = np.array([0, 3, 5, n])
+    ortho_block = np.searchsorted(cpntr, c, side="right") - 1
+    ortho_widths = np.diff(cpntr).astype(np.float64)
+    alpha = 4.0
+    pts, cost = rblib.optimal_partition_1d(
+        r, ortho_block, ortho_widths,
+        base_pts=np.arange(n + 1), alpha=alpha, max_span=n,
+    )
+    assert cost == pytest.approx(
+        _brute_force_1d(r, ortho_block, ortho_widths, n, alpha)
+    )
+    # the returned split points must reproduce the returned cost
+    check, _, _ = rblib.partition_cost(
+        r, c, np.asarray(pts), cpntr, alpha=alpha
+    )
+    assert check == pytest.approx(cost)
+
+
+def test_partition_cost_hand_checked():
+    """2x2 grid, 3 stored cells, hand-computed Ahrens–Boman cost."""
+    rows = np.array([0, 1, 2, 3])
+    cols = np.array([0, 1, 2, 0])
+    rpntr = np.array([0, 2, 4])
+    cpntr = np.array([0, 2, 4])
+    # cells: (0,0) 2x2, (1,1) 2x2, (1,0) 2x2 -> 3 blocks, 12 stored entries
+    cost, nb, stored = rblib.partition_cost(rows, cols, rpntr, cpntr, alpha=10.0)
+    assert (nb, stored) == (3, 12)
+    assert cost == pytest.approx(10.0 * 3 + 12)
+
+
+def test_propose_recovers_band_blocking():
+    """The DP must repair the misblocked band: strictly cheaper than the
+    as-given 2-wide scalar blocking, and correct after application."""
+    v = misblocked_banded()
+    specs = rblib.propose_reblockings(v, device="cpu")
+    assert specs and specs[0].strategy == "dp"
+    spec = specs[0]
+    assert spec.cost < rblib.MIN_GAIN * spec.base_cost
+    rvbr, gather = rblib.apply_reblock(v, spec)
+    np.testing.assert_allclose(rvbr.to_dense(), v.to_dense())
+    assert vbrlib.structure_hash(rvbr) == spec.structure_hash
+
+
+def test_propose_skips_well_blocked():
+    """A structure already at (near-)optimal blocking yields no dp
+    proposal — the DP result matches the as-given partition."""
+    n = 48
+    splits = list(range(0, n + 1, 8))
+    dense = np.zeros((n, n), np.float32)
+    rng = np.random.default_rng(9)
+    for a in range(n // 8):  # block-diagonal, fully dense blocks
+        dense[a * 8 : (a + 1) * 8, a * 8 : (a + 1) * 8] = (
+            rng.standard_normal((8, 8))
+        )
+    v = vbrlib.from_dense(dense, splits, splits)
+    specs = rblib.propose_reblockings(v, device="cpu")
+    assert not [s for s in specs if s.strategy == "dp"]
+
+
+def test_aligned_proposal_is_tile_aligned():
+    v = misblocked_banded(n=64, bw=4, step=2)
+    specs = rblib.propose_reblockings(v, device="cpu", include_aligned=True)
+    aligned = [s for s in specs if s.strategy.startswith("aligned")]
+    assert aligned
+    tm, tk = rblib.ALIGNED_TILE
+    rp = np.asarray(aligned[0].rpntr)
+    assert all(p % tm == 0 or p == v.shape[0] for p in rp)
+    assert aligned[0].fill_ratio <= rblib.MAX_ALIGNED_FILL
+    rvbr, _ = rblib.apply_reblock(v, aligned[0])
+    np.testing.assert_allclose(rvbr.to_dense(), v.to_dense())
+
+
+def test_val_gather_remaps_new_values():
+    """The staged reblocked kernel reads the ORIGINAL val layout: new
+    values written into the original layout must flow through."""
+    v = misblocked_banded()
+    spec = rblib.propose_reblockings(v, device="cpu")[0]
+    k = rblib.stage_reblocked(v, spec, StagingOptions(), "spmv", None)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal(v.shape[1]).astype(np.float32))
+    new_val = rng.standard_normal(v.val.shape).astype(np.float32)
+    v2 = vbrlib.VBR(shape=v.shape, val=new_val, rpntr=v.rpntr, cpntr=v.cpntr,
+                    bindx=v.bindx, bpntrb=v.bpntrb, bpntre=v.bpntre,
+                    indx=v.indx)
+    got = np.asarray(k(jnp.asarray(new_val), x))
+    np.testing.assert_allclose(got, v2.to_dense() @ np.asarray(x), **TOL)
+
+
+def test_reblocked_spmm_matches_dense():
+    v = misblocked_banded()
+    spec = rblib.propose_reblockings(v, device="cpu")[0]
+    rng = np.random.default_rng(6)
+    X = jnp.asarray(rng.standard_normal((v.shape[1], 5)).astype(np.float32))
+    k = rblib.stage_reblocked(v, spec, StagingOptions(), "spmm", 5)
+    got = np.asarray(k(jnp.asarray(v.val), X))
+    np.testing.assert_allclose(got, v.to_dense() @ np.asarray(X), **TOL)
+
+
+def test_apply_reblock_rejects_stale_spec():
+    v = misblocked_banded()
+    other = misblocked_banded(seed=99, bw=8)  # wider band: different cells
+    spec = rblib.propose_reblockings(v, device="cpu")[0]
+    with pytest.raises(ValueError, match="stale"):
+        rblib.apply_reblock(other, spec)
+
+
+# --------------------------------------------------------------------- #
+# DIA-hybrid SpMV (kernels.dia_hybrid)
+# --------------------------------------------------------------------- #
+def test_dia_hybrid_matches_dense_banded():
+    v = misblocked_banded()
+    k = stage_dia_hybrid(v)
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal(v.shape[1]).astype(np.float32))
+    got = np.asarray(k(jnp.asarray(v.val), x))
+    np.testing.assert_allclose(got, v.to_dense() @ np.asarray(x), **TOL)
+    assert k.num_diagonals == 7
+    # off-band STORED slots (the 2x2 blocks straddling the band edge)
+    # must land in the remainder — they are live parameter slots
+    assert k.remainder_nnz > 0
+
+
+def test_dia_hybrid_scalar_band_no_remainder():
+    """Scalar-blocked pure band: every stored slot sits on a dense
+    diagonal, so the remainder is empty and the kernel is all-DIA."""
+    v = misblocked_banded(step=1)
+    k = stage_dia_hybrid(v)
+    assert k.remainder_nnz == 0
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal(v.shape[1]).astype(np.float32))
+    got = np.asarray(k(jnp.asarray(v.val), x))
+    np.testing.assert_allclose(got, v.to_dense() @ np.asarray(x), **TOL)
+
+
+def test_dia_hybrid_with_remainder():
+    """Arrow: diagonals capture the band, the hub goes to the staged-VBR
+    remainder — both halves must add up to the dense product."""
+    v = arrow_vbr()
+    info = inspectlib.detect_structure(v)
+    assert info.wants_dia
+    k = stage_dia_hybrid(v)
+    assert k.remainder_nnz > 0
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.standard_normal(v.shape[1]).astype(np.float32))
+    got = np.asarray(k(jnp.asarray(v.val), x))
+    np.testing.assert_allclose(got, v.to_dense() @ np.asarray(x), **TOL)
+
+
+def test_dia_hybrid_non_square():
+    n, m = 40, 56
+    rng = np.random.default_rng(10)
+    dense = np.zeros((n, m), np.float32)
+    for i in range(n):
+        for j in range(max(0, i - 2), min(m, i + 3)):
+            dense[i, j] = rng.standard_normal()
+    v = vbrlib.from_dense(dense, list(range(0, n + 1, 4)),
+                          list(range(0, m + 1, 4)))
+    k = stage_dia_hybrid(v, offsets=(-2, -1, 0, 1, 2))
+    x = jnp.asarray(rng.standard_normal(m).astype(np.float32))
+    got = np.asarray(k(jnp.asarray(v.val), x))
+    np.testing.assert_allclose(got, dense @ np.asarray(x), **TOL)
+
+
+def test_dia_hybrid_rejects_undiagonal():
+    v = vbrlib.synthesize(120, 100, 10, 8, 30, 0.25, uniform=False, seed=42)
+    with pytest.raises(ValueError):
+        stage_dia_hybrid(v)
+
+
+def test_stage_spmv_dispatches_dia_backend():
+    v = misblocked_banded()
+    k = stage_spmv(v, StagingOptions(backend="dia_hybrid"))
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal(v.shape[1]).astype(np.float32))
+    got = np.asarray(k(jnp.asarray(v.val), x))
+    np.testing.assert_allclose(got, v.to_dense() @ np.asarray(x), **TOL)
+    with pytest.raises(ValueError, match="SpMV-only"):
+        stage_spmm(v, 4, StagingOptions(backend="dia_hybrid"))
+    with pytest.raises(ValueError, match="unsharded"):
+        stage_spmv(v, StagingOptions(backend="dia_hybrid"), shards=2)
+
+
+# --------------------------------------------------------------------- #
+# autotuner integration (the tentpole contract)
+# --------------------------------------------------------------------- #
+def test_autotune_reblock_candidates_on_banded():
+    """Acceptance: on the banded fixture pattern the extended tuner sees
+    reblocked and DIA-hybrid candidates, and the key carries ``-rb``."""
+    v = misblocked_banded()
+    store = cachelib.PlanCache(os.environ["REPRO_CACHE_DIR"])
+    plan = autotune(v, kind="spmv", cache=store, include_reblock=True,
+                    warmup=0, iters=1)
+    labels = set(plan.timings)
+    assert "dia_hybrid" in labels
+    assert any(l.startswith("reblock[dp]+") for l in labels)
+    assert "reblock_fill_ratio" in plan.meta
+    assert plan.meta["structure_class"] == "banded"
+    assert plan.meta["dia_offsets"] == [0, -1, 1, -2, 2, -3, 3]
+    # every structure-derived candidate produced a real timing (the
+    # winner itself is a measured choice — benchmarks/bench_reblock.py
+    # asserts the selection with proper warmup/iters)
+    assert all(t > 0 for t in plan.timings.values())
+
+
+def test_autotune_reblock_candidates_on_arrow():
+    v = arrow_vbr()
+    store = cachelib.PlanCache(os.environ["REPRO_CACHE_DIR"])
+    plan = autotune(v, kind="spmv", cache=store, include_reblock=True,
+                    warmup=0, iters=1)
+    assert plan.meta["structure_class"] == "arrow"
+    assert "dia_hybrid" in plan.timings
+
+
+def test_autotune_warm_rederives_nothing():
+    """Warm restart: plan served from disk with zero benchmarks AND zero
+    detection/DP work (the inspection pipeline runs only on cold tunes)."""
+    v = misblocked_banded()
+    store = cachelib.PlanCache(os.environ["REPRO_CACHE_DIR"])
+    k1 = autotune_stage(v, kind="spmv", cache=store, include_reblock=True,
+                        warmup=0, iters=1)
+    rng = np.random.default_rng(12)
+    x = jnp.asarray(rng.standard_normal(v.shape[1]).astype(np.float32))
+    ref = np.asarray(k1(jnp.asarray(v.val), x))
+
+    clear_cache()
+    reset_autotune_stats()
+    rblib.reset_reblock_stats()
+    k2 = autotune_stage(v, kind="spmv", cache=store, include_reblock=True)
+    got = np.asarray(k2(jnp.asarray(v.val), x))
+    np.testing.assert_allclose(got, ref, **TOL)
+    stats = autotune_stats()
+    assert stats["cache_hits"] == 1
+    assert stats["benchmarks"] == 0
+    assert rblib.reblock_stats()["dp_runs"] == 0
+
+
+def test_autotune_reblock_key_does_not_alias_base():
+    """The same structure tuned with and without ``include_reblock`` gets
+    two distinct plans — the extended space must never leak into callers
+    that didn't opt in."""
+    v = misblocked_banded()
+    store = cachelib.PlanCache(os.environ["REPRO_CACHE_DIR"])
+    autotune(v, kind="spmv", cache=store, include_reblock=True,
+             warmup=0, iters=1)
+    reset_autotune_stats()
+    plan_base = autotune(v, kind="spmv", cache=store, warmup=0, iters=1)
+    assert autotune_stats()["cache_misses"] == 1  # not served from -rb
+    assert plan_base.reblock is None
+    assert plan_base.options.backend != "dia_hybrid"
+    assert not any(l.startswith("reblock[") for l in plan_base.timings)
+
+
+def test_autotune_stage_reblocked_plan_roundtrip():
+    """A persisted reblocked plan stages through ``autotune_stage`` on a
+    fresh process (simulated by clearing in-memory caches) and matches
+    dense."""
+    import dataclasses
+
+    v = misblocked_banded()
+    store = cachelib.PlanCache(os.environ["REPRO_CACHE_DIR"])
+    plan = autotune(v, kind="spmv", cache=store, include_reblock=True,
+                    warmup=0, iters=1)
+    # force a reblocked winner regardless of CPU timing noise
+    spec = rblib.propose_reblockings(v, device="cpu")[0]
+    key = cachelib.plan_key("spmv", vbrlib.structure_hash(v), "cpu",
+                            reblock=True)
+    forced = dataclasses.replace(
+        plan, options=StagingOptions(backend="grouped"),
+        reblock=spec.to_dict(),
+    )
+    store.store_plan(key, forced)
+    clear_cache()
+    k = autotune_stage(v, kind="spmv", cache=store, include_reblock=True)
+    assert k.spec.strategy == "dp"
+    rng = np.random.default_rng(13)
+    x = jnp.asarray(rng.standard_normal(v.shape[1]).astype(np.float32))
+    got = np.asarray(k(jnp.asarray(v.val), x))
+    np.testing.assert_allclose(got, v.to_dense() @ np.asarray(x), **TOL)
+
+
+def test_reblocked_structure_stored_for_warm_restart():
+    """When a reblocked candidate wins, the REBLOCKED structure is also
+    persisted under its own hash (warm restarts re-derive nothing)."""
+    import dataclasses
+
+    v = misblocked_banded()
+    store = cachelib.PlanCache(os.environ["REPRO_CACHE_DIR"])
+    autotune(v, kind="spmv", cache=store, include_reblock=True,
+             warmup=0, iters=1)
+    spec = rblib.propose_reblockings(v, device="cpu")[0]
+    assert store.load_structure(spec.structure_hash) is not None
+
+
+# --------------------------------------------------------------------- #
+# cost-model corpus exclusion (the satellite bugfix)
+# --------------------------------------------------------------------- #
+def test_corpus_excludes_reblocked_plans_without_features():
+    """Regression: a measured plan that chose a reblocked candidate but
+    predates the ``reblock_fill_ratio`` meta feature must NOT train the
+    cost model (its timings describe the reblocked structure, its
+    features the original — a silent feedback loop)."""
+    import dataclasses
+
+    from repro.core import cost_model as cmlib
+
+    v = misblocked_banded()
+    store = cachelib.PlanCache(os.environ["REPRO_CACHE_DIR"])
+    plan = autotune(v, kind="spmv", cache=store, include_reblock=True,
+                    warmup=0, iters=1)
+    assert "reblock_fill_ratio" in plan.meta
+
+    spec = rblib.propose_reblockings(v, device="cpu")[0]
+    legacy_meta = {k: val for k, val in plan.meta.items()
+                   if k != "reblock_fill_ratio"}
+    legacy = dataclasses.replace(plan, reblock=spec.to_dict(),
+                                 meta=legacy_meta)
+    ok = dataclasses.replace(plan, reblock=spec.to_dict())
+    store.store_plan("spmv-legacy-cpu-rb", legacy)
+    store.store_plan("spmv-ok-cpu-rb", ok)
+    rows = cmlib.corpus(store, "cpu", "spmv")
+    stored = {id(p) for p in rows}
+    assert not any(p.reblock is not None
+                   and "reblock_fill_ratio" not in p.meta for p in rows)
+    assert any(p.reblock is not None for p in rows)  # feature-complete ones stay
+    del stored
+
+
+def test_feature_vector_includes_structure_features():
+    from repro.core import cost_model as cmlib
+
+    assert "bandwidth_frac" in cmlib.FEATURE_NAMES
+    assert "diag_occupancy" in cmlib.FEATURE_NAMES
+    assert "reblock_fill" in cmlib.FEATURE_NAMES
+    v = misblocked_banded()
+    feats = cmlib.vbr_features(v, "spmv")
+    assert len(feats) == len(cmlib.FEATURE_NAMES)
+    names = list(cmlib.FEATURE_NAMES)
+    assert feats[names.index("bandwidth_frac")] == pytest.approx(3 / 48)
+    assert feats[names.index("diag_occupancy")] == pytest.approx(1.0)
+    # plans without the feature degrade to neutral defaults
+    legacy = cmlib.meta_features("spmv", {"shape": [8, 8], "stored_nnz": 4,
+                                          "num_blocks": 1})
+    assert legacy[names.index("bandwidth_frac")] == 1.0
+    assert legacy[names.index("diag_occupancy")] == 0.0
+    assert legacy[names.index("reblock_fill")] == 1.0
+
+
+# --------------------------------------------------------------------- #
+# sparse.linear exposure
+# --------------------------------------------------------------------- #
+def _banded_pattern(R=12, tm=4):
+    from repro.sparse.linear import BlockPattern
+
+    rows, cols = zip(*[(i, j) for i in range(R)
+                       for j in (i - 1, i, i + 1) if 0 <= j < R])
+    return BlockPattern(R * tm, R * tm, tm, tm, rows, cols)
+
+
+def test_linear_dia_hybrid_matches_grouped():
+    from repro.sparse.linear import _MATMUL_IMPLS, pack_dense
+
+    pat = _banded_pattern()
+    rng = np.random.default_rng(14)
+    W = np.zeros((pat.d_in, pat.d_out), np.float32)
+    for r, c in zip(pat.rows, pat.cols):
+        W[r * pat.tm:(r + 1) * pat.tm, c * pat.tk:(c + 1) * pat.tk] = (
+            rng.standard_normal((pat.tm, pat.tk))
+        )
+    tiles = jnp.asarray(pack_dense(jnp.asarray(W), pat))
+    x = jnp.asarray(rng.standard_normal((3, pat.d_in)).astype(np.float32))
+    got = np.asarray(_MATMUL_IMPLS["dia_hybrid"](x, tiles, pat))
+    np.testing.assert_allclose(got, np.asarray(x) @ W, **TOL)
+
+
+def test_linear_dia_hybrid_grads():
+    from repro.sparse.linear import _MATMUL_IMPLS, pack_dense, sparse_matmul
+
+    pat = _banded_pattern(R=6)
+    rng = np.random.default_rng(15)
+    tiles = jnp.asarray(
+        rng.standard_normal((pat.n_tiles, pat.tm, pat.tk)).astype(np.float32)
+    )
+    x = jnp.asarray(rng.standard_normal((2, pat.d_in)).astype(np.float32))
+    f_dia = lambda t: _MATMUL_IMPLS["dia_hybrid"](x, t, pat).sum()
+    f_ref = lambda t: sparse_matmul(x, t, pat).sum()
+    np.testing.assert_allclose(
+        np.asarray(jax.grad(f_dia)(tiles)),
+        np.asarray(jax.grad(f_ref)(tiles)), **TOL,
+    )
+
+
+def test_choose_strategy_include_dia_keys_and_candidates():
+    from repro.sparse import linear as linlib
+
+    pat = _banded_pattern()
+    store = cachelib.PlanCache(os.environ["REPRO_CACHE_DIR"])
+    linlib._STRATEGY_REGISTRY.clear()
+    s = linlib.choose_matmul_strategy(pat, cache=store, include_dia=True,
+                                      warmup=0, iters=1)
+    assert s in ("grouped", "dia_hybrid")
+    phash = linlib.pattern_hash(pat)
+    device = jax.default_backend()
+    rb_key = cachelib.plan_key("linear", phash, device, reblock=True)
+    plan = store.load_plan(rb_key)
+    assert plan is not None
+    assert "dia_hybrid" in plan.timings
+    assert plan.meta["structure_class"] == "banded"
+    # the base key is untouched: non-opted-in callers see no plan
+    assert store.load_plan(cachelib.plan_key("linear", phash, device)) is None
+    s_base = linlib.choose_matmul_strategy(pat, cache=store)
+    assert s_base == "grouped"  # single base candidate on cpu, no bench
+    linlib._STRATEGY_REGISTRY.clear()
