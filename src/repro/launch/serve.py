@@ -38,6 +38,18 @@ def main():
     ap.add_argument("--policy", default="fcfs",
                     choices=("fcfs", "warm_first"),
                     help="[--continuous] admission policy")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="[--continuous] share page-aligned prompt-prefix "
+                         "pages across requests (copy-on-write)")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="[--continuous] prefill long prompts in chunks "
+                         "interleaved with decode steps")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="[--chunked-prefill] tokens per prefill chunk "
+                         "(default 2*page_size)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="[--continuous] prepend this many identical tokens "
+                         "to every prompt (demo workload for --prefix-sharing)")
     args = ap.parse_args()
 
     if args.devices:
@@ -56,21 +68,28 @@ def main():
 
     cfg = get_config(args.arch, reduced=args.reduced)
     params = init_params(cfg, jax.random.PRNGKey(0))
-    engine = ServeEngine(cfg, params, max_len=args.prompt_len + args.gen)
+    engine = ServeEngine(
+        cfg, params,
+        max_len=args.shared_prefix + args.prompt_len + args.gen,
+    )
     if engine.warmup_stats["plans_staged"]:
         print(f"staged {engine.warmup_stats['plans_staged']} sparse plans "
               "(cold cache); restart to serve warm")
 
     if args.continuous:
         rng = np.random.default_rng(1)
+        shared = rng.integers(
+            0, cfg.vocab_size, size=(args.shared_prefix,)
+        ).astype(np.int32)
         reqs = []
         for i in range(args.requests):
             P = int(rng.integers(max(args.prompt_len // 4, 1),
                                  args.prompt_len + 1))
             G = int(rng.integers(max(args.gen // 4, 1), args.gen + 1))
+            suffix = rng.integers(0, cfg.vocab_size, size=(P,)).astype(
+                np.int32)
             reqs.append({
-                "prompt": rng.integers(0, cfg.vocab_size, size=(P,)).astype(
-                    np.int32),
+                "prompt": np.concatenate([shared, suffix]),
                 "max_new_tokens": G,
                 "temperature": args.temperature,
                 "rng": jax.random.PRNGKey(i),
@@ -80,6 +99,9 @@ def main():
         results, sched = engine.serve(
             reqs, page_size=args.page_size, max_batch=args.max_batch,
             policy=args.policy,
+            prefix_sharing=args.prefix_sharing,
+            chunked_prefill=args.chunked_prefill,
+            prefill_chunk=args.prefill_chunk,
         )
         dt = time.perf_counter() - t0
         s = sched.stats
@@ -87,6 +109,12 @@ def main():
               f"{s['steps']} steps, {s['decode_tokens']} decode tokens "
               f"({s['decode_tokens'] / max(dt, 1e-9):.1f} tok/s), "
               f"{s['evictions']} evictions, {s['resumes']} resumes")
+        if args.prefix_sharing or args.chunked_prefill:
+            print(f"prefix sharing: {s['prefix_hits']} hits, "
+                  f"{s['pages_shared']} pages shared, "
+                  f"{s['cow_copies']} COW copies; "
+                  f"prefill {s['prefill_tokens']} tokens "
+                  f"in {s['prefill_chunks']} chunks")
         first = results["req0"]
         print("first request:", first["tokens"][: first["prompt_len"] + 8].tolist())
         return

@@ -18,4 +18,5 @@ from .transformer import (
     init_cache,
     init_params,
     prefill,
+    prefill_chunk,
 )

@@ -341,6 +341,25 @@ def prefill(params, cfg: ModelConfig, tokens, cache, enc_out=None):
     return _unembed(params, cfg, x[:, -1:]), new_cache
 
 
+def prefill_chunk(params, cfg: ModelConfig, tokens, cache, start, enc_out=None):
+    """Process prompt positions [start, start+S), writing the cache at the
+    same offsets and attending over every cached position <= each query
+    (`cache_pos` drives both the write offset and the causal-mask offset in
+    the attention layers).  With start == 0 this is exactly ``prefill``.
+
+    Only valid for models whose cache is entirely attention KV: a Mamba/SSM
+    sub-layer in "prefill" mode recomputes its state from scratch over just
+    this chunk, so chunked callers (the serving scheduler) must gate on a
+    fully-paged cache."""
+    x = _embed(params, cfg, tokens)
+    positions = start + jnp.arange(tokens.shape[1])
+    x, new_cache, _ = _run_groups(
+        cfg, cfg.groups, params["groups"], x, positions, cache, start,
+        cfg.causal, enc_out, "prefill",
+    )
+    return _unembed(params, cfg, x[:, -1:]), new_cache
+
+
 def decode_step(params, cfg: ModelConfig, token, cache, pos, enc_out=None):
     """One decode step.  token: (B, 1) int32, pos: scalar int32 position."""
     x = _embed(params, cfg, token)

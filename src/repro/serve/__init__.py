@@ -1,3 +1,3 @@
 from .engine import ServeEngine
-from .paged_cache import PageAllocator, PagedKVCache
+from .paged_cache import PageAllocator, PagedKVCache, PagesExhausted
 from .scheduler import ContinuousBatchingScheduler, Request

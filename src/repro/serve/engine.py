@@ -192,7 +192,8 @@ class ServeEngine:
     def make_scheduler(self, *, max_len: Optional[int] = None, **kw):
         """A ContinuousBatchingScheduler sharing this engine's model and
         mesh.  kwargs pass through (page_size, num_pages, max_batch,
-        policy, clock, plan_cache, record_logits, ...)."""
+        policy, clock, plan_cache, record_logits, prefix_sharing,
+        chunked_prefill, prefill_chunk, ...)."""
         from .scheduler import ContinuousBatchingScheduler
 
         return ContinuousBatchingScheduler(
@@ -222,7 +223,11 @@ class ServeEngine:
         sched = self.make_scheduler(**kw)
         for r in requests:
             sched.submit(**r)
-        return sched.run(max_steps=max_steps), sched
+        results = sched.run(max_steps=max_steps)
+        # surface page-sharing effectiveness next to the plan-warmup stats
+        for k in ("prefix_hits", "pages_shared", "cow_copies"):
+            self.warmup_stats[k] = sched.stats[k]
+        return results, sched
 
     def _serve_fallback(self, requests) -> dict:
         """Sequential ``generate()`` execution with scheduler-shaped

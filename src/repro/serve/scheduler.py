@@ -14,12 +14,29 @@ Scheduler states::
        └──────── resume (lossless) ◀── PREEMPTED (pages parked on host)
 
 One ``step()`` is one deterministic scheduling iteration: (0) stage cold
-plans, (1) admit/resume from the queue, (2) grow page tables for this
-step's write position — evicting the youngest-arrival lane on page
+plans, (1) admit/resume from the queue, (1b) advance every mid-prefill
+lane by one chunk (``chunked_prefill``), (2) grow page tables for this
+step's write position — evicting the youngest-arrival lane under page
 pressure — (3) one batched decode step over all running lanes, (4) retire
 finished sequences.  Determinism is total given a fixed submission order
 and clock: tests drive it with a fake clock and golden transcripts freeze
 the admit/evict/page-table sequence.
+
+Two opt-in features reuse the prompt across requests / unblock decode
+under long prompts (both default off — the golden transcript pins the
+plain schedule):
+
+- ``prefix_sharing``: admission maps the page-aligned prompt prefix onto
+  already-resident pages via the cache's prefix index (refcount + COW, see
+  paged_cache.py) and prefills only the unshared tail — N requests with a
+  common system prompt pay its pages and FLOPs once.
+- ``chunked_prefill``: prompts prefill ``prefill_chunk`` tokens per
+  scheduler step, interleaved with decode, instead of monopolizing a step;
+  a mid-prefill lane holds pages but neither decodes nor blocks others,
+  and eviction mid-prefill is lossless (resume continues at the next
+  chunk).  Both features require a fully-paged cache (attention-only
+  decoder): SSM/conv state summarizes the whole prefix and can be neither
+  inherited from shared pages nor rebuilt chunk-by-chunk.
 
 Decode is a single jitted ``vmap`` over lanes — each lane carries its own
 cache view, position, RNG key, and temperature, so a lane's computation is
@@ -39,7 +56,8 @@ import jax.numpy as jnp
 
 from ..models.config import ModelConfig
 from ..models.transformer import decode_step, init_cache, prefill
-from .paged_cache import PagedKVCache
+from ..models.transformer import prefill_chunk as _prefill_chunk_fn
+from .paged_cache import PagedKVCache, PagesExhausted
 
 __all__ = ["Request", "ContinuousBatchingScheduler"]
 
@@ -70,6 +88,7 @@ class Request:
     tokens: List[int] = dataclasses.field(default_factory=list)
     logits: list = dataclasses.field(default_factory=list)
     skips: int = 0  # times passed over by warm-first admission (aging)
+    prefilled: int = 0  # prompt positions whose KV is resident (shared or computed)
     metrics: dict = dataclasses.field(default_factory=dict)
 
     @property
@@ -141,6 +160,9 @@ class ContinuousBatchingScheduler:
         mesh=None,
         plan_cache=None,
         record_logits: bool = False,
+        prefix_sharing: bool = False,
+        chunked_prefill: bool = False,
+        prefill_chunk: Optional[int] = None,
     ):
         if policy not in ("fcfs", "warm_first"):
             raise ValueError(f"unknown admission policy {policy!r}")
@@ -157,17 +179,42 @@ class ContinuousBatchingScheduler:
         self.mesh = mesh
         self.plan_cache = plan_cache
         self.record_logits = record_logits
+        self.prefix_sharing = bool(prefix_sharing)
+        self.chunked_prefill = bool(chunked_prefill)
+        self.prefill_chunk = (
+            2 * int(page_size) if prefill_chunk is None else int(prefill_chunk)
+        )
+        if self.prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
 
         import math
 
         view_pages = math.ceil(self.max_len / page_size)
         if num_pages is None:
             num_pages = self.max_batch * view_pages
-        self.kv = PagedKVCache(cfg, num_pages, page_size, self.max_len)
+        self.kv = PagedKVCache(
+            cfg, num_pages, page_size, self.max_len,
+            prefix_sharing=self.prefix_sharing,
+        )
+        if (self.prefix_sharing or self.chunked_prefill) and not all(
+            self.kv.paged
+        ):
+            raise ValueError(
+                "prefix_sharing/chunked_prefill need a fully-paged cache "
+                "(attention-only decoder): SSM/conv state summarizes the "
+                "whole prefix and cannot be shared or rebuilt per chunk"
+            )
 
         self._prefill = jax.jit(
             lambda params, toks, cache: prefill(params, cfg, toks, cache)
         )
+        self._prefill_chunk = jax.jit(
+            lambda params, toks, cache, start: _prefill_chunk_fn(
+                params, cfg, toks, cache, start
+            )
+        )
+        # fixed dense width for chunk compute: one retrace per chunk length
+        self._prefill_width = self.kv.view_pages * int(page_size)
         self._lane_step = _make_lane_step(cfg, self.kv.paged_mask)
 
         self.queue: List[Request] = []  # kept in arrival order
@@ -182,6 +229,12 @@ class ContinuousBatchingScheduler:
             "finished": 0,
             "plans_staged": 0,
             "decode_tokens": 0,
+            "prefill_tokens": 0,
+            "prefill_chunks": 0,
+            "prefix_hits": 0,
+            "pages_shared": 0,
+            "cow_copies": 0,
+            "shared_releases": 0,
         }
 
     # ------------------------------------------------------------------ #
@@ -388,8 +441,12 @@ class ContinuousBatchingScheduler:
                     return  # head-of-line blocking on pages: deterministic
                 self.stats["resumes"] += 1
                 ev["resumed"].append(req.rid)
+            elif self.prefix_sharing or self.chunked_prefill:
+                if not self._begin_prefill(req, now, ev):
+                    return
+                ev["admitted"].append(req.rid)
             else:
-                if not self.kv.alloc_seq(req.rid, req.prompt_len):
+                if not self.kv.alloc_seq(req.rid, req.prompt_len, zero=False):
                     return
                 self._prefill_request(req, now)
                 ev["admitted"].append(req.rid)
@@ -403,6 +460,8 @@ class ContinuousBatchingScheduler:
                 self.lanes[free[0]] = req
 
     def _prefill_request(self, req: Request, now: float) -> None:
+        """Whole-prompt prefill at admission — the plain path (both features
+        off); frozen by the golden transcript, so it stays byte-stable."""
         P = req.prompt_len
         cache = init_cache(self.cfg, 1, P)
         logits, cache = self._prefill(
@@ -411,10 +470,137 @@ class ContinuousBatchingScheduler:
         row = logits[:, -1].astype(jnp.float32)  # (1, V)
         first = int(jnp.argmax(row, axis=-1)[0])
         self.kv.write_prefill(req.rid, cache, P)
+        self.stats["prefill_tokens"] += P
+        req.prefilled = P
         req.tokens.append(first)
         if self.record_logits:
             req.logits.append(np.asarray(row[0]))
         req.metrics.setdefault("first_token_at", now)
+
+    # ------------------------------------------------------------------ #
+    # prefix-shared / chunked prefill
+    # ------------------------------------------------------------------ #
+    def _begin_prefill(self, req: Request, now: float, ev: dict) -> bool:
+        """Admission for the sharing/chunked path: attach the page-aligned
+        shared prompt prefix by reference (pages + FLOPs skipped), reserve
+        pages for the whole tail — or only the first chunk when chunking —
+        and prefill the tail in one shot unless ``chunked_prefill`` defers
+        it to ``_advance_prefills``.  False = not enough pages, admission
+        blocks head-of-line (deterministic, like the plain path)."""
+        P = req.prompt_len
+        ok = self.kv.alloc_seq(
+            req.rid,
+            P,
+            tokens=req.prompt if self.prefix_sharing else None,
+            reserve=self.prefill_chunk if self.chunked_prefill else None,
+            zero=False,
+        )
+        if not ok:
+            return False
+        req.prefilled = self.kv.seq_len[req.rid]  # == shared span
+        if req.prefilled:
+            ev["shared"][req.rid] = req.prefilled
+        if not self.chunked_prefill:
+            self._prefill_one_chunk(req, now, ev, in_admit=True)
+        return True
+
+    def _prefill_one_chunk(
+        self, req: Request, now: float, ev: dict, in_admit: bool = False
+    ) -> None:
+        """Advance one mid-prefill sequence by one chunk (or the whole
+        remaining tail when chunking is off).  The final chunk emits the
+        first generated token from its last-position logits, exactly like
+        whole-prompt prefill.  Page pressure parks other lanes per policy;
+        if nothing is left to evict, this sequence parks itself losslessly
+        (the computed chunk is dropped, ``prefilled`` does not advance)."""
+        P = req.prompt_len
+        if self.prefix_sharing and self.chunked_prefill:
+            # the prefix writer may have registered pages since our last
+            # chunk (or since admission): attach instead of recomputing
+            if self.kv.attach_shared(req.rid):
+                req.prefilled = self.kv.seq_len[req.rid]
+                ev["shared"][req.rid] = req.prefilled
+        start = req.prefilled
+        end = P if not self.chunked_prefill else min(P, start + self.prefill_chunk)
+        while not self.kv.ensure_capacity(req.rid, end, zero=False):
+            others = [
+                r for r in self.lanes if r is not None and r is not req
+            ]
+            if others:
+                victim = max(others, key=lambda r: (r.arrival, r.rid))
+                self._evict(victim, ev)
+                continue
+            if self._release_parked_shared_one():
+                continue
+            if in_admit:  # capacity was reserved at alloc; unreachable
+                raise PagesExhausted(f"admission reserve lost for {req.rid!r}")
+            self._evict(req, ev)
+            return
+        dense = self.kv.read_dense(req.rid, s_max=self._prefill_width)
+        logits, dense = self._prefill_chunk(
+            self.params,
+            jnp.asarray(req.prompt[None, start:end]),
+            dense,
+            jnp.int32(start),
+        )
+        self.kv.write_span(req.rid, dense, start, end)
+        req.prefilled = end
+        self.stats["prefill_tokens"] += end - start
+        self.stats["prefill_chunks"] += 1
+        ev["prefill"][req.rid] = [start, end]
+        if end == P:
+            row = logits[:, -1].astype(jnp.float32)  # (1, V)
+            req.tokens.append(int(jnp.argmax(row, axis=-1)[0]))
+            if self.record_logits:
+                req.logits.append(np.asarray(row[0]))
+            req.metrics.setdefault("first_token_at", now)
+
+    def _advance_prefills(self, now: float, ev: dict) -> None:
+        """One chunk per mid-prefill lane per step, oldest arrival first —
+        interleaved with decode so long prompts never stall running lanes."""
+        if not self.chunked_prefill:
+            return
+        order = sorted(
+            (
+                i
+                for i, r in enumerate(self.lanes)
+                if r is not None and r.prefilled < r.prompt_len
+            ),
+            key=lambda i: (self.lanes[i].arrival, self.lanes[i].rid),
+        )
+        for i in order:
+            req = self.lanes[i]
+            if req is None or req.prefilled >= req.prompt_len:
+                continue  # evicted by an earlier lane's page pressure
+            self._prefill_one_chunk(req, now, ev)
+            # max_new_tokens == 1: the final chunk's token is the output
+            if (
+                self.lanes[i] is req
+                and req.tokens
+                and len(req.tokens) >= req.max_new_tokens
+            ):
+                self._finish(req, i, now, ev)
+
+    def _release_parked_shared_one(self) -> bool:
+        """Terminal-pressure escape valve: demote the youngest parked
+        sequence's retained shared pages to host copies so the arena can
+        actually drain.  False when no parked sequence holds shared pages
+        (always, with sharing off — the plain eviction order is untouched)."""
+        if not self.prefix_sharing:
+            return False
+        parked = [
+            r
+            for r in self.queue
+            if r.state == PREEMPTED
+            and self.kv.is_parked(r.rid)
+            and self.kv.parked_shared_pages(r.rid) > 0
+        ]
+        if not parked:
+            return False
+        victim = max(parked, key=lambda r: (r.arrival, r.rid))
+        self.kv.release_parked_shared(victim.rid)
+        self.stats["shared_releases"] += 1
+        return True
 
     def _evict(self, req: Request, ev: dict) -> None:
         lane = self.lanes.index(req)
@@ -426,16 +612,17 @@ class ContinuousBatchingScheduler:
         self._enqueue(req)
 
     def _ensure_growth(self, ev: dict) -> List[int]:
-        """Reserve this step's write position for every running lane,
+        """Reserve this step's write position for every decoding lane,
         evicting the youngest-arrival lane under page pressure.  Returns
-        the lane indices that will decode this step."""
+        the lane indices that will decode this step (mid-prefill lanes hold
+        pages but neither grow nor decode here)."""
         order = sorted(
             (i for i, r in enumerate(self.lanes) if r is not None),
             key=lambda i: (self.lanes[i].arrival, self.lanes[i].rid),
         )
         for i in list(order):
             req = self.lanes[i]
-            if req is None:
+            if req is None or not req.tokens:
                 continue
             # this step consumes tokens[-1], writing its KV at position
             # prompt_len + len(tokens) - 1 — reserve exactly that
@@ -444,10 +631,12 @@ class ContinuousBatchingScheduler:
             ):
                 running = [r for r in self.lanes if r is not None]
                 victim = max(running, key=lambda r: (r.arrival, r.rid))
+                if victim is req and self._release_parked_shared_one():
+                    continue
                 self._evict(victim, ev)
                 if victim is req:
                     break
-        return [i for i, r in enumerate(self.lanes) if r is not None]
+        return [i for i, r in enumerate(self.lanes) if r is not None and r.tokens]
 
     def _finish(self, req, lane, now, ev, lane_assigned=True) -> None:
         self.kv.free_seq(req.rid)
@@ -473,8 +662,14 @@ class ContinuousBatchingScheduler:
             "running": [],
             "page_tables": {},
         }
+        if self.prefix_sharing or self.chunked_prefill:
+            # gated: the frozen transcript compares events by full-dict
+            # equality, so the plain schedule must not grow keys
+            ev["shared"] = {}
+            ev["prefill"] = {}
         self._stage_cold(ev)
         self._admit(now, ev)
+        self._advance_prefills(now, ev)
         active = self._ensure_growth(ev)
         ev["running"] = [self.lanes[i].rid for i in active]
         ev["page_tables"] = {
@@ -484,6 +679,8 @@ class ContinuousBatchingScheduler:
         if active:
             self._decode_once(active, ev)
         self.stats["steps"] += 1
+        for k, v in self.kv.share_stats.items():
+            self.stats[k] = v
         self.transcript.append(ev)
         return ev
 
@@ -495,20 +692,23 @@ class ContinuousBatchingScheduler:
         keys = []
         zero_key = np.zeros_like(np.asarray(jax.random.PRNGKey(0)))
         active_set = set(active)
+        lane_reqs = {}
+        rng_before = {}
         for i in range(B):
             req = self.lanes[i] if i in active_set else None
             if req is None:
                 keys.append(zero_key)
                 continue
+            lane_reqs[i] = req
             toks[i, 0] = req.tokens[-1]
             pos[i] = req.prompt_len + len(req.tokens) - 1
             temps[i] = req.temperature
             # mirror ServeEngine.generate: split every step, sample with sub
+            rng_before[i] = req.rng  # rewound if this step's write is lost
             req.rng, sub = jax.random.split(req.rng)
             keys.append(np.asarray(sub))
         view = self.kv.gather(
-            [self.lanes[i].rid if self.lanes[i] is not None else None
-             for i in range(B)]
+            [lane_reqs[i].rid if i in lane_reqs else None for i in range(B)]
         )
         nxt, logits, slices = self._lane_step(
             self.params,
@@ -524,10 +724,40 @@ class ContinuousBatchingScheduler:
         flat = [np.asarray(leaf) for leaf in flat]
         now = self.clock()
         for i in active:
-            req = self.lanes[i]
-            self.kv.append_token(
-                req.rid, [leaf[i] for leaf in flat], int(pos[i])
-            )
+            req = lane_reqs[i]
+            if self.lanes[i] is not req:
+                # parked by an earlier lane's page pressure before its own
+                # append: this step's write is lost, so rewind the rng split
+                # — the redone step after resume samples identically
+                req.rng = rng_before[i]
+                continue
+            slices_i = [leaf[i] for leaf in flat]
+            while True:
+                try:
+                    self.kv.append_token(req.rid, slices_i, int(pos[i]))
+                    break
+                except PagesExhausted:
+                    # COW or growth needed a page mid-append: evict per
+                    # policy (youngest other lane first), then the shared-
+                    # page escape valve, then park this lane losslessly
+                    others = [
+                        r
+                        for r in self.lanes
+                        if r is not None and r is not req
+                    ]
+                    if others:
+                        victim = max(
+                            others, key=lambda r: (r.arrival, r.rid)
+                        )
+                        self._evict(victim, ev)
+                        continue
+                    if self._release_parked_shared_one():
+                        continue
+                    self._evict(req, ev)
+                    req.rng = rng_before[i]
+                    break
+            if self.lanes[i] is not req:
+                continue  # parked itself above
             req.tokens.append(int(nxt[i]))
             if self.record_logits:
                 req.logits.append(logits[i])

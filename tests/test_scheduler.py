@@ -383,3 +383,186 @@ def test_mesh_scheduler_matches_generate_and_warms_shard_plans():
                 results[f"m{i}"]["tokens"], np.asarray(out)[0])
         print("MESH-EQ-OK")
     """, n=2)
+
+
+# ---------------------------------------------------------------------- #
+# prefix sharing + chunked prefill
+# ---------------------------------------------------------------------- #
+def test_prefix_sharing_allocates_prefix_once_and_matches_generate(engine):
+    """N requests with a common 12-token prefix must pay its pages and
+    prefill FLOPs once (exactly 3 pages x 3 followers fewer allocations,
+    ~1/N of the shared-span work) while decode stays token-identical and
+    logits stay within 1e-6 of independent generate runs."""
+    cfg = engine.cfg
+    rng = np.random.default_rng(5)
+    shared = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+    suffixes = [2, 3, 4, 2]
+    prompts = [
+        np.concatenate([shared, rng.integers(0, cfg.vocab_size, k).astype(np.int32)])
+        for k in suffixes
+    ]
+    reqs = [
+        {"prompt": p, "max_new_tokens": 4, "rid": f"p{i}"}
+        for i, p in enumerate(prompts)
+    ]
+    kw = dict(page_size=4, max_batch=4, record_logits=True)
+    res_off, sched_off = engine.serve(reqs, **kw)
+    res_on, sched_on = engine.serve(reqs, prefix_sharing=True, **kw)
+
+    # footprint: page_size=4 -> the 12-token prefix is 3 pages, shared by
+    # the 3 followers instead of re-allocated: exactly 9 pages saved
+    assert sched_on.stats["prefix_hits"] == 3
+    assert sched_on.stats["pages_shared"] == 9
+    assert (
+        sched_on.kv.allocator.total_allocated
+        == sched_off.kv.allocator.total_allocated - 9
+    )
+    # prefill FLOPs for the shared span are skipped (12 tokens x 3)
+    assert sched_on.stats["prefill_tokens"] == sched_off.stats["prefill_tokens"] - 36
+    # the engine surfaces the counters
+    assert engine.warmup_stats["prefix_hits"] == 3
+    assert engine.warmup_stats["pages_shared"] == 9
+    assert engine.warmup_stats["cow_copies"] == sched_on.stats["cow_copies"]
+
+    for i, p in enumerate(prompts):
+        ref = _reference(engine, p, 4)
+        np.testing.assert_array_equal(res_on[f"p{i}"]["tokens"], ref)
+        np.testing.assert_array_equal(res_off[f"p{i}"]["tokens"], ref)
+        # per-step logits: sharing must stay within the 1e-6 contract
+        got = sched_on.requests[f"p{i}"].logits
+        want = sched_off.requests[f"p{i}"].logits
+        assert len(got) == len(want) == 4
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, atol=1e-6, rtol=0)
+
+
+def test_chunked_prefill_interleaves_with_decode_and_matches(engine):
+    """A long prompt prefills in page-sized chunks across steps while the
+    short requests keep decoding — and every output still matches the
+    independent single-sequence reference."""
+    cfg = engine.cfg
+    prompts = _prompts(cfg, [14, 3, 4], seed=13)
+    reqs = [
+        {"prompt": p, "max_new_tokens": 5, "rid": f"c{i}", "arrival": float(i)}
+        for i, p in enumerate(prompts)
+    ]
+    results, sched = engine.serve(
+        reqs, page_size=4, max_batch=3, chunked_prefill=True, prefill_chunk=4,
+        clock=_fake_clock(),
+    )
+    assert sched.stats["prefill_chunks"] >= 4 + 1 + 1  # 14/4 chunks + 2 shorts
+    assert sched.stats["prefill_tokens"] == 14 + 3 + 4
+    # interleaving: some step advanced the long prefill WHILE lanes decoded
+    assert any(
+        ev.get("prefill") and ev["running"] for ev in sched.transcript
+    ), "chunked prefill never overlapped decode"
+    for i, p in enumerate(prompts):
+        ref = _reference(engine, p, 5)
+        np.testing.assert_array_equal(results[f"c{i}"]["tokens"], ref)
+
+
+def test_sharing_and_chunking_compose_under_page_pressure(engine):
+    """Both features on with a pool small enough to force eviction: shared
+    pages survive parking under their refcount, late chunk attachment picks
+    up pages registered after admission, and everything stays lossless."""
+    cfg = engine.cfg
+    rng = np.random.default_rng(17)
+    shared = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+    prompts = [
+        np.concatenate([shared, rng.integers(0, cfg.vocab_size, k).astype(np.int32)])
+        for k in (2, 3, 2, 4)
+    ]
+    reqs = [
+        {"prompt": p, "max_new_tokens": 4, "rid": f"g{i}", "arrival": float(i)}
+        for i, p in enumerate(prompts)
+    ]
+    reqs[1]["temperature"] = 0.8
+    reqs[1]["rng"] = jax.random.PRNGKey(321)
+    results, sched = engine.serve(
+        reqs, page_size=4, max_batch=4, num_pages=11,
+        prefix_sharing=True, chunked_prefill=True, prefill_chunk=8,
+        clock=_fake_clock(),
+    )
+    assert sched.stats["prefix_hits"] >= 1
+    assert sched.stats["pages_shared"] >= 3
+    for i, p in enumerate(prompts):
+        ref = _reference(
+            engine, p, 4,
+            temperature=reqs[i].get("temperature", 0.0),
+            rng=jax.random.PRNGKey(321) if i == 1 else None,
+        )
+        np.testing.assert_array_equal(results[f"g{i}"]["tokens"], ref)
+    assert sched.kv.allocator.num_free == sched.kv.allocator.num_pages
+
+
+def test_pages_exhausted_mid_decode_evicts_and_resumes_lossless(engine, monkeypatch):
+    """A typed PagesExhausted raised mid-append (the COW/growth path) must
+    evict per policy and keep every sequence lossless — including the
+    victim whose step was dropped before its append (rng rewind)."""
+    from repro.serve.paged_cache import PagesExhausted
+
+    cfg = engine.cfg
+    prompts = _prompts(cfg, [5, 6], seed=77)
+    sched = engine.make_scheduler(
+        page_size=4, max_batch=2, num_pages=10, clock=_fake_clock()
+    )
+    for i, p in enumerate(prompts):
+        sched.submit(
+            p, max_new_tokens=6, temperature=0.7,
+            rng=jax.random.PRNGKey(500 + i), rid=f"x{i}", arrival=float(i),
+        )
+    real = sched.kv.append_token
+    fired = {}
+    def flaky(rid, slices, position):
+        if rid == "x0" and position >= 7 and "x0" not in fired:
+            fired["x0"] = True
+            raise PagesExhausted("forced mid-decode exhaustion")
+        return real(rid, slices, position)
+    monkeypatch.setattr(sched.kv, "append_token", flaky)
+    results = sched.run()
+    assert fired, "the forced exhaustion never triggered"
+    assert sched.stats["evictions"] >= 1
+    for i, p in enumerate(prompts):
+        ref = _reference(
+            engine, p, 6, temperature=0.7, rng=jax.random.PRNGKey(500 + i)
+        )
+        np.testing.assert_array_equal(results[f"x{i}"]["tokens"], ref)
+
+    # single lane: nothing to evict -> the lane parks ITSELF, rewinds its
+    # rng split, and redoes the step after resume with identical sampling
+    sched2 = engine.make_scheduler(
+        page_size=4, max_batch=1, num_pages=8, clock=_fake_clock()
+    )
+    sched2.submit(
+        prompts[0], max_new_tokens=6, temperature=0.7,
+        rng=jax.random.PRNGKey(500), rid="solo",
+    )
+    real2 = sched2.kv.append_token
+    fired2 = {}
+    def flaky2(rid, slices, position):
+        if position >= 7 and not fired2:
+            fired2["solo"] = True
+            raise PagesExhausted("forced self-park")
+        return real2(rid, slices, position)
+    monkeypatch.setattr(sched2.kv, "append_token", flaky2)
+    results2 = sched2.run()
+    assert fired2 and sched2.stats["evictions"] >= 1
+    ref = _reference(
+        engine, prompts[0], 6, temperature=0.7, rng=jax.random.PRNGKey(500)
+    )
+    np.testing.assert_array_equal(results2["solo"]["tokens"], ref)
+
+
+def test_sharing_and_chunking_require_fully_paged_cache():
+    """SSM/conv state summarizes the whole prefix: it can be neither
+    inherited from shared pages nor rebuilt chunk-by-chunk, so the knobs
+    must be rejected loudly for state-carrying models."""
+    from repro.serve.scheduler import ContinuousBatchingScheduler
+
+    cfg = get_config("mamba2-1.3b", reduced=True)
+    cfg = dataclasses.replace(cfg, compute_dtype="float32", param_dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    for kw in ({"prefix_sharing": True}, {"chunked_prefill": True}):
+        with pytest.raises(ValueError, match="fully-paged"):
+            ContinuousBatchingScheduler(cfg, params, max_len=16, **kw)
+    ContinuousBatchingScheduler(cfg, params, max_len=16)  # defaults stay fine
